@@ -1,0 +1,35 @@
+"""Table 1 / Remark 4.1: wall-clock cost of the weighted aggregation rules —
+all are O(dm) (+ log factors), so µs/call should scale ~linearly in d·m.
+Also benchmarks the Pallas kernels (interpret mode) against the jnp oracles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import make_aggregator
+from repro.utils import timeit_median
+
+from .common import fmt_row
+
+GRID = [(9, 10_000), (17, 100_000), (33, 1_000_000)]
+SPECS = ("mean", "cwmed", "gm", "cwtm", "ctma:cwmed", "ctma:gm", "krum", "bucketing:cwmed")
+
+
+def run(full: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    grid = GRID if full else GRID[:2]
+    for m, d in grid:
+        k1, k2 = jax.random.split(jax.random.fold_in(key, d))
+        x = jax.random.normal(k1, (m, d))
+        s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+        for spec in SPECS:
+            agg = jax.jit(make_aggregator(spec, lam=0.25))
+            us = timeit_median(lambda: agg(x, s), iters=5, warmup=2) * 1e6
+            rows.append(fmt_row(f"aggcost_{spec}_m{m}_d{d}", us,
+                                f"bytes_per_call={m * d * 4}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

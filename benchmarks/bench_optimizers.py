@@ -1,0 +1,35 @@
+"""Paper Figure 4 / Figure 7: μ²-SGD vs standard momentum vs SGD in the
+asynchronous Byzantine setup (history matters: SGD lags both)."""
+from __future__ import annotations
+
+from repro.optim import OptConfig
+
+from .common import fmt_row, run_async_experiment
+
+# 9 workers, 4 Byzantine with update mass (3+4+5+6)/45 = 0.4 = the paper's λ
+SETUP = dict(m=9, byz=(2, 3, 4, 5), arrival="proportional", steps=600,
+             agg="ctma:cwmed", lam=0.4)
+OPTS = {
+    "mu2": OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25),
+    "momentum": OptConfig(name="momentum", lr=0.05, beta=0.9),
+    "sgd": OptConfig(name="sgd", lr=0.05),
+}
+
+
+def run(full: bool = False):
+    rows = []
+    for attack in ("sign_flip", "label_flip"):
+        accs = {}
+        us = 0.0
+        for name, opt in OPTS.items():
+            r = run_async_experiment(attack=attack, opt=opt, **SETUP)
+            accs[name] = r["acc"]
+            us = r["us_per_step"]
+        rows.append(fmt_row(
+            f"fig4_{attack}", us,
+            ";".join(f"acc_{k}={v:.3f}" for k, v in accs.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,47 @@
+"""§Roofline reader: renders the per-(arch × shape × mesh) roofline table from
+the dry-run artifacts (experiments/dryrun/*.json). Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import fmt_row
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records():
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run(full: bool = False):
+    rows = []
+    recs = load_records()
+    if not recs:
+        return [fmt_row("roofline_missing", 0.0, "run repro.launch.dryrun --all first")]
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = len(recs) - n_ok
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r["status"] != "ok":
+            rows.append(fmt_row(name, 0.0, f"SKIP:{r['reason'][:40]}"))
+            continue
+        rf = r["roofline"]
+        step_ms = max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e3
+        rows.append(fmt_row(
+            name, step_ms * 1e3,
+            f"bottleneck={rf['bottleneck']};compute_ms={rf['compute_s']*1e3:.2f};"
+            f"memory_ms={rf['memory_s']*1e3:.2f};collective_ms={rf['collective_s']*1e3:.2f};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f}"))
+    rows.append(fmt_row("roofline_summary", 0.0, f"ok={n_ok};skipped={n_skip}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,33 @@
+"""Paper Figure 2 / Figure 5: weighted vs non-weighted robust aggregators in
+an imbalanced asynchronous Byzantine environment (arrivals ∝ id², so honest
+fast workers dominate the update count; non-weighted rules treat them equally
+with slow/Byzantine ones and lose accuracy)."""
+from __future__ import annotations
+
+from .common import fmt_row, run_async_experiment
+
+# 17 workers / 8 Byzantine (paper Fig. 2), arrivals ∝ id². The Byzantine
+# workers are the SLOW half: their *update mass* is tiny (λ_emp ≈ 0.11) but
+# they are 8/17 ≈ 47% of the workers — unweighted rules treat their stale
+# poisoned buffers as half the votes, weighted rules suppress them by s_i.
+SETUP = dict(m=17, byz=(0, 1, 2, 3, 4, 5, 6, 7), arrival="squared", steps=500)
+
+
+def run(full: bool = False):
+    rows = []
+    for attack, lam in (("label_flip", 0.3), ("sign_flip", 0.4)):
+        for agg, label in (("cwmed", "CWMed"), ("gm", "RFA/GM")):
+            accs = {}
+            for weighted in (True, False):
+                r = run_async_experiment(attack=attack, agg=agg, lam=lam,
+                                         weighted=weighted, **SETUP)
+                accs[weighted] = r
+            name = f"fig2_{attack}_{label}"
+            rows.append(fmt_row(name, accs[True]["us_per_step"],
+                                f"acc_weighted={accs[True]['acc']:.3f};"
+                                f"acc_unweighted={accs[False]['acc']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

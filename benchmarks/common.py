@@ -1,0 +1,80 @@
+"""Shared harness for the paper-reproduction benchmarks: trains the paper's
+classifier with Alg. 2 under a configurable attack/aggregator and reports
+test accuracy (the quantity plotted in the paper's figures)."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import MLP_SMALL
+from repro.core import AsyncByzantineEngine, AttackConfig, EngineConfig
+from repro.data import classification_batches, make_classification_data, worker_batches
+from repro.models.classifier import classifier_accuracy, classifier_loss, init_classifier
+from repro.optim import OptConfig
+from repro.utils import ravel_pytree_fn
+
+MCFG = MLP_SMALL
+# σ=1.6 keeps the Bayes accuracy high but leaves headroom so that broken
+# training is visible as an accuracy gap (σ=0.8 saturates every variant at 1.0)
+DATA_KW = dict(image_hw=MCFG.image_hw, channels=MCFG.channels, seed=0, sigma=1.6)
+
+
+def run_async_experiment(
+    *,
+    attack: str = "sign_flip",
+    agg: str = "ctma:cwmed",
+    lam: float = 0.38,
+    byz: tuple = (7, 8),
+    m: int = 9,
+    arrival: str = "proportional",
+    opt: Optional[OptConfig] = None,
+    steps: int = 500,
+    batch: int = 8,
+    seed: int = 0,
+    weighted: bool = True,
+) -> dict:
+    """One training run; returns {'acc', 'us_per_step', 'final_loss'}."""
+    opt = opt or OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25)
+    params = init_classifier(jax.random.PRNGKey(seed), MCFG)
+    flat, unravel = ravel_pytree_fn(params)
+
+    def loss_fn(w, b):
+        return classifier_loss(unravel(w), MCFG, b)
+
+    ecfg = EngineConfig(m=m, byz=byz, attack=AttackConfig(attack), agg=agg,
+                        lam=lam, arrival=arrival, opt=opt, seed=seed)
+    eng = AsyncByzantineEngine(ecfg, loss_fn, flat.shape[0])
+    if not weighted:  # ablation: ignore update counts (the non-weighted rules)
+        inner = eng.agg_fn
+        eng.agg_fn = lambda D, S: inner(D, jnp.ones_like(S))
+        eng._step = jax.jit(eng._step_impl, donate_argnums=(0,))
+
+    init = worker_batches(m, batch, **DATA_KW)
+    st = eng.init(flat, {"x": jnp.asarray(init["x"]), "y": jnp.asarray(init["y"])})
+    data = classification_batches(batch, **DATA_KW)
+
+    # warmup-compile one step before timing
+    b0 = next(data)
+    st, _ = eng.step(st, {"x": jnp.asarray(b0["x"]), "y": jnp.asarray(b0["y"])})
+    t0 = time.perf_counter()
+    loss = np.nan
+    for _ in range(steps):
+        b = next(data)
+        st, mtr = eng.step(st, {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])})
+    jax.block_until_ready(st.x)
+    dt = time.perf_counter() - t0
+
+    test = make_classification_data(1024, sample_seed=10_000 + seed, **DATA_KW)
+    acc = float(classifier_accuracy(unravel(st.x), MCFG,
+                                    {"x": jnp.asarray(test["x"]),
+                                     "y": jnp.asarray(test["y"])}))
+    return {"acc": acc, "us_per_step": dt / steps * 1e6,
+            "final_loss": float(mtr["loss"])}
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one bench per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,fig3,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring the paper's
+experimental panels:
+
+    fig2_*      Fig. 2/5  weighted vs non-weighted robust aggregators
+    fig3_*      Fig. 3/6  ω-CTMA effect on base aggregators
+    fig4_*      Fig. 4/7  μ²-SGD vs momentum vs SGD
+    thm42_*     Thm. 4.2  1/√T excess-loss decay under attack
+    aggcost_*   Table 1 / Remark 4.1 aggregator cost scaling
+    kernel_*    Pallas kernel timings (interpret mode)
+    roofline_*  §Roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = {
+    "aggcost": "benchmarks.bench_agg_cost",
+    "fig2": "benchmarks.bench_weighted_vs_unweighted",
+    "fig3": "benchmarks.bench_ctma_effect",
+    "fig4": "benchmarks.bench_optimizers",
+    "thm42": "benchmarks.bench_convergence",
+    "kernels": "benchmarks.bench_kernels",
+    "roofline": "benchmarks.bench_roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod_name = BENCHES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            for row in mod.run(full=args.full):
+                print(row, flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

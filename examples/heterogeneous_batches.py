@@ -1,0 +1,36 @@
+"""Remark 3.1 in practice: synchronous data-parallel groups with UNEVEN batch
+sizes, robust-aggregated with weights ∝ batch size — the weighted framework's
+natural generalization beyond asynchrony. One group is Byzantine.
+
+    PYTHONPATH=src python examples/heterogeneous_batches.py
+"""
+import jax
+import numpy as np
+
+from repro.data import lm_batches
+from repro.dist.steps import RobustDPConfig, init_train_state, make_robust_train_step
+from repro.models import ModelConfig
+from repro.optim import OptConfig
+from repro.utils import logger
+
+import jax.numpy as jnp
+
+CFG = ModelConfig(name="tiny-lm", n_layers=2, d_model=96, n_heads=4, n_kv=2,
+                  d_ff=192, vocab=128)
+OPT = OptConfig(name="mu2", lr=5e-3, gamma=0.1, beta=0.25)
+
+for weight_mode in ("batch_size", "counts"):
+    rcfg = RobustDPConfig(n_groups=4, agg="ctma:cwmed", lam=0.3,
+                          weight_mode=weight_mode, group_sizes=(1, 2, 3, 2),
+                          byz_groups=(0,), byz_attack="sign_flip")
+    step = jax.jit(make_robust_train_step(CFG, OPT, rcfg))
+    state = init_train_state(CFG, OPT, jax.random.PRNGKey(0), rcfg)
+    data = lm_batches(CFG, 8, 48, seed=1)
+    losses = []
+    for _ in range(120):
+        state, m = step(state, {k: jnp.asarray(v) for k, v in next(data).items()})
+        losses.append(float(m["loss"]))
+    logger.info("weights=%-11s first %.4f -> last %.4f (Byzantine group 0 active)",
+                weight_mode, np.mean(losses[:10]), np.mean(losses[-10:]))
+logger.info("weighting by contributed samples (Remark 3.1) integrates cleanly "
+            "with the robust-DP train step")

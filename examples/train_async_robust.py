@@ -1,0 +1,78 @@
+"""End-to-end driver: train a transformer LM for a few hundred steps with the
+paper's Asynchronous Robust μ²-SGD, under an active Byzantine minority, and
+compare against the undefended mean aggregator.
+
+    PYTHONPATH=src python examples/train_async_robust.py [--steps 300]
+
+The model is a reduced qwen2-family decoder (~3M params) on the synthetic
+affine-recurrence LM task; 9 async workers with arrivals ∝ worker id, two
+Byzantine workers mounting a sign-flip attack (λ ≈ 0.38).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import AsyncByzantineEngine, AttackConfig, EngineConfig, expected_lambda
+from repro.data import lm_batches
+from repro.models import init_lm, lm_loss
+from repro.optim import OptConfig
+from repro.utils import ravel_pytree_fn, logger
+
+
+def run(agg: str, lam: float, steps: int, seed: int = 0) -> list:
+    cfg = smoke_config("qwen2-1.5b").with_(n_layers=2, d_model=128, d_ff=256,
+                                           vocab=256)
+    params = init_lm(jax.random.PRNGKey(seed), cfg)
+    flat, unravel = ravel_pytree_fn(params)
+    logger.info("model: %s (%.2fM params), agg=%s", cfg.name, flat.size / 1e6, agg)
+
+    def loss_fn(w, batch):
+        return lm_loss(unravel(w), cfg, batch)
+
+    ecfg = EngineConfig(m=9, byz=(7, 8), attack=AttackConfig("sign_flip"),
+                        agg=agg, lam=lam, arrival="proportional",
+                        opt=OptConfig(name="mu2", lr=0.02, gamma=0.1, beta=0.25),
+                        seed=seed)
+    logger.info("expected Byzantine update fraction λ=%.2f", expected_lambda(ecfg))
+    eng = AsyncByzantineEngine(ecfg, loss_fn, flat.shape[0])
+
+    data = lm_batches(cfg, 4, 64, seed=seed)
+
+    def jb(b):
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    m = 9
+    init_stack = [next(data) for _ in range(m)]
+    init_batches = {k: jnp.stack([jnp.asarray(b[k]) for b in init_stack])
+                    for k in init_stack[0]}
+    state = eng.init(flat, init_batches)
+
+    losses = []
+    for k in range(steps):
+        state, metrics = eng.step(state, jb(next(data)))
+        losses.append(float(metrics["loss"]))
+        if (k + 1) % 50 == 0:
+            logger.info("  [%s] step %d loss %.4f", agg, k + 1,
+                        float(np.mean(losses[-20:])))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+
+    robust = run("ctma:cwmed", lam=0.38, steps=args.steps)
+    undefended = run("mean", lam=0.0, steps=args.steps)
+
+    r, u = np.mean(robust[-30:]), np.mean(undefended[-30:])
+    logger.info("final loss — robust ω-CTMA: %.4f | undefended mean: %.4f", r, u)
+    if r < u:
+        logger.info("robust aggregation defended the run (lower is better)")
+
+
+if __name__ == "__main__":
+    main()

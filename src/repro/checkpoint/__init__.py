@@ -1,0 +1,1 @@
+from .np_checkpoint import latest_step, restore_pytree, save_pytree  # noqa: F401

@@ -1,0 +1,66 @@
+"""Minimal dependency-free checkpointing: pytree <-> npz keyed by tree paths.
+
+Values are fully materialized on host (suitable for single-process CPU runs
+and tests; a production deployment would swap in tensorstore-backed shards —
+the interface is the same).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "##"
+
+
+def _flatten_with_paths(tree: Pytree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree: Pytree, ckpt_dir: str | Path, step: int) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    path = ckpt_dir / f"step_{step:09d}.npz"
+    np.savez(path, **flat)
+    (ckpt_dir / "latest.json").write_text(json.dumps({"step": step}))
+    return path
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    meta = Path(ckpt_dir) / "latest.json"
+    if not meta.exists():
+        return None
+    return int(json.loads(meta.read_text())["step"])
+
+
+def restore_pytree(target: Pytree, ckpt_dir: str | Path, step: Optional[int] = None) -> Pytree:
+    """Restore into the structure of ``target`` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    data = np.load(Path(ckpt_dir) / f"step_{step:09d}.npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

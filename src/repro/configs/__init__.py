@@ -1,0 +1,72 @@
+"""Architecture registry + assigned input shapes.
+
+``get_config(name)`` returns the full production config; ``smoke_config(name)``
+the reduced same-family variant used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, NamedTuple
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "hubert-xlarge": "hubert_xlarge",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "gemma3-4b": "gemma3_4b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "gemma3-27b": "gemma3_27b",
+    "internvl2-1b": "internvl2_1b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return _mod(name).SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+SHAPE_NAMES = tuple(SHAPES)
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """Whether the (arch, shape) combination runs, with the skip reason."""
+    sh = SHAPES[shape]
+    if sh.mode == "decode":
+        if not cfg.supports_decode():
+            return False, "encoder-only architecture has no autoregressive decode"
+        if shape == "long_500k" and not cfg.is_subquadratic():
+            return False, "full-attention architecture; 500k KV decode requires a sub-quadratic variant"
+    return True, ""

@@ -1,0 +1,23 @@
+"""codeqwen1.5-7b [hf:Qwen/CodeQwen1.5-7B] — dense MHA (kv == heads), qwen1.5 arch.
+
+32L d_model=4096 32H (kv=32) d_ff=13440 vocab=92416.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=32,
+    d_ff=13440,
+    vocab=92416,
+    qkv_bias=True,
+    fsdp=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=4, d_ff=512,
+                     vocab=1024, dtype="float32", remat=False)

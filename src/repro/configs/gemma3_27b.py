@@ -1,0 +1,28 @@
+"""gemma3-27b [hf:google/gemma-3-1b-pt family] — 5 local : 1 global, 128k context.
+
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    arch_type="dense",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab=262144,
+    qk_norm=True,
+    window=1024,
+    global_every=6,
+    rope_theta=1_000_000.0,
+    fsdp=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=6, d_model=256, n_heads=4, n_kv=2, head_dim=64,
+                     d_ff=512, vocab=1024, window=32, global_every=3,
+                     dtype="float32", remat=False)

@@ -1,0 +1,28 @@
+"""gemma3-4b [hf:google/gemma-3-1b-pt family] — 5 local : 1 global, 128k context.
+
+34L d_model=2560 8H (GQA kv=4, head_dim=256) d_ff=10240 vocab=262144.
+Sliding-window local layers (window=1024) make long_500k decode feasible.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-4b",
+    arch_type="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab=262144,
+    qk_norm=True,
+    window=1024,
+    global_every=6,        # pattern: 5 local then 1 global
+    rope_theta=1_000_000.0,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=6, d_model=256, n_heads=4, n_kv=2, head_dim=64,
+                     d_ff=512, vocab=1024, window=32, global_every=3,
+                     dtype="float32", remat=False)

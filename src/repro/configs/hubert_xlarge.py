@@ -1,0 +1,26 @@
+"""hubert-xlarge [arXiv:2106.07447] — audio encoder backbone (w2v2 arch).
+
+48L d_model=1280 16H (GQA kv=16) d_ff=5120 vocab=504. Encoder-only: no
+autoregressive decode (decode shapes are skipped, see DESIGN.md). The
+mel/conv feature extractor is a stub — batches carry frame embeddings.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    frontend="audio",
+    tie_embeddings=False,  # 504-dim masked-unit prediction head
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=4, d_ff=512,
+                     dtype="float32", remat=False)

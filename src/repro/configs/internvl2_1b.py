@@ -1,0 +1,26 @@
+"""internvl2-1b [arXiv:2404.16821] — InternViT (stub) + Qwen2-0.5B-class LLM.
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655. The vision encoder +
+projector are stubs per the assignment carve-out: batches carry 256
+precomputed patch embeddings of width d_model prepended to the text tokens.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    arch_type="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv=2,
+    d_ff=4864,
+    vocab=151655,
+    qkv_bias=True,
+    frontend="vision",
+    n_patches=256,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=2, d_ff=512,
+                     vocab=1024, n_patches=8, dtype="float32", remat=False)

@@ -1,0 +1,31 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2] — trillion-parameter MoE (paper-table).
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 (per expert) vocab=163840,
+384 routed experts top-8 + 1 shared. ~1.03T total / ~32B active params.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv=8,
+    head_dim=112,
+    d_ff=2048,
+    vocab=163840,
+    n_experts=384,
+    top_k=8,
+    n_shared=1,
+    d_expert=2048,
+    capacity_factor=1.25,
+    moe_dispatch="sharded",
+    fsdp=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, n_heads=8, n_kv=2, head_dim=32,
+                     d_ff=128, n_experts=4, top_k=2, n_shared=1, d_expert=128,
+                     vocab=1024, dtype="float32", remat=False)

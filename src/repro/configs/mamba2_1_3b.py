@@ -1,0 +1,29 @@
+"""mamba2-1.3b [arXiv:2405.21060] — SSD (state-space duality), attention-free.
+
+48L d_model=2048 vocab=50280, ssm_state=128, expand=2 (d_inner=4096),
+head_dim=64 (64 SSD heads). Sub-quadratic: runs the long_500k decode shape.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    arch_type="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,
+    n_kv=1,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    conv_width=4,
+    tie_embeddings=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, d_ff=0, vocab=1024,
+                     ssm_state=32, ssm_head_dim=32, ssm_chunk=16,
+                     dtype="float32", remat=False)

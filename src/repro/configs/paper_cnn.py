@@ -1,0 +1,17 @@
+"""The paper's own experimental model: a two-conv-layer CNN classifier
+(Appendix D, Table 2) — Conv(C,20,5) → ReLU → MaxPool → Conv(20,50,5) → ReLU
+→ MaxPool → FC(→50) → norm → ReLU → FC(→10).
+
+MNIST/CIFAR-10 are unavailable offline; the data pipeline substitutes a
+deterministic 10-class Gaussian-mixture image dataset of the same shapes
+(28×28×1 / 32×32×3). See repro.models.classifier for the implementation.
+"""
+from repro.models.classifier import ClassifierConfig
+
+MNIST_LIKE = ClassifierConfig(name="paper-cnn-mnist", kind="cnn",
+                              image_hw=(28, 28), channels=1, n_classes=10)
+CIFAR_LIKE = ClassifierConfig(name="paper-cnn-cifar", kind="cnn",
+                              image_hw=(32, 32), channels=3, n_classes=10)
+MLP_SMALL = ClassifierConfig(name="paper-mlp", kind="mlp",
+                             image_hw=(8, 8), channels=1, n_classes=10,
+                             mlp_hidden=(64,))

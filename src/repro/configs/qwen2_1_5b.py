@@ -1,0 +1,22 @@
+"""qwen2-1.5b [arXiv:2407.10671] — dense GQA with QKV bias.
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b",
+    arch_type="dense",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv=2,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=2, d_ff=512,
+                     vocab=1024, dtype="float32", remat=False)

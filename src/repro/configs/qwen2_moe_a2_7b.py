@@ -1,0 +1,30 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B] — 60 routed experts top-4 + 4 shared.
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408 (per expert) vocab=151936.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    arch_type="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv=16,
+    d_ff=1408,
+    vocab=151936,
+    qkv_bias=True,
+    n_experts=60,
+    top_k=4,
+    n_shared=4,
+    d_expert=1408,
+    moe_shard="tp",  # 60 experts don't divide the 16-way model axis
+    moe_dispatch="sharded",
+    fsdp=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv=4, d_ff=128,
+                     n_experts=4, top_k=2, n_shared=1, d_expert=128,
+                     vocab=1024, dtype="float32", remat=False)

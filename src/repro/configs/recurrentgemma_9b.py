@@ -1,0 +1,29 @@
+"""recurrentgemma-9b [arXiv:2402.19427] — RG-LRU + local attention, 1 attn : 2 rec.
+
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000, window=2048.
+Sub-quadratic: runs the long_500k decode shape.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    block_pattern=("rec", "rec", "local"),
+    window=2048,
+    lru_width=4096,
+    conv_width=4,
+    fsdp=True,
+    dtype="bfloat16",
+    remat=True,
+)
+
+SMOKE = CONFIG.with_(n_layers=3, d_model=256, n_heads=4, n_kv=1, head_dim=64,
+                     d_ff=512, vocab=1024, lru_width=256, window=32,
+                     dtype="float32", remat=False)

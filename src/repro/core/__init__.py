@@ -1,0 +1,23 @@
+"""The paper's primary contribution: weighted robust aggregation + async robust μ²-SGD."""
+from .aggregators import (  # noqa: F401
+    AGGREGATOR_SPECS,
+    bucketing,
+    c_lambda,
+    krum,
+    make_aggregator,
+    weighted_ctma,
+    weighted_cwmed,
+    weighted_cwtm,
+    weighted_gm,
+    weighted_mean,
+    weighted_median_1d,
+    weighted_std,
+)
+from .attacks import ATTACKS, AttackConfig, byzantine_vector, flip_labels  # noqa: F401
+from .engine import (  # noqa: F401
+    AsyncByzantineEngine,
+    EngineConfig,
+    EngineState,
+    arrival_probs,
+    expected_lambda,
+)

@@ -1,0 +1,77 @@
+"""Byzantine attack suite (paper Appendix D, weighted/asynchronous variants).
+
+An attack produces the vector a Byzantine worker sends to the parameter server.
+The omniscient attacks (``little``, ``empire``) see the *honest* workers' current
+momentum buffers and their weights, exactly as in the paper's adaptation where
+means/stds are computed coordinate-wise *with respect to the weights*.
+
+``label_flip`` is a data poisoning attack — it is applied inside the engine by
+flipping the labels (y -> 9 - y) before the gradient computation, so it has no
+entry here beyond the label transform helper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+from .aggregators import weighted_mean, weighted_std
+
+Array = jnp.ndarray
+
+ATTACKS = ("none", "sign_flip", "label_flip", "little", "empire")
+
+
+class AttackConfig(NamedTuple):
+    name: str = "none"
+    epsilon: float = 0.1     # empire scale
+    z_max: Optional[float] = None  # little deviation; None -> derived from weights
+    n_classes: int = 10      # label flip: y -> (C-1) - y
+
+
+def flip_labels(y: Array, n_classes: int = 10) -> Array:
+    return (n_classes - 1) - y
+
+
+def _little_zmax(honest_weight: Array, byz_weight: Array) -> Array:
+    """A-Little-Is-Enough deviation, computed on weight mass (the paper adapts
+    z_max to update counts rather than worker counts).
+
+    With n = total weight and b = Byzantine weight, the supporting mass is
+    s = floor(n/2 + 1) - b and z_max = Phi^{-1}((n - b - s) / (n - b)).
+    """
+    n = honest_weight + byz_weight
+    s = jnp.floor(n / 2.0 + 1.0) - byz_weight
+    phi = jnp.clip((n - byz_weight - s) / jnp.maximum(n - byz_weight, 1e-9), 1e-4, 1.0 - 1e-4)
+    return ndtri(phi)
+
+
+def byzantine_vector(
+    cfg: AttackConfig,
+    honest_d: Array,          # (m, d) current momentum buffers (all workers)
+    honest_mask: Array,       # (m,) bool — True for honest workers
+    weights: Array,           # (m,) update counts s_t
+    own_update: Array,        # (d,) the vector an honest worker would send
+) -> Array:
+    """Return the Byzantine worker's transmitted vector."""
+    name = cfg.name
+    if name in ("none", "label_flip"):
+        # label_flip poisons the gradient upstream; the transmission is 'honest'
+        return own_update
+    if name == "sign_flip":
+        return -own_update
+
+    hm = honest_mask.astype(honest_d.dtype)
+    hw = weights * hm
+    mu = weighted_mean(honest_d, hw + 1e-30)
+    if name == "empire":
+        return -cfg.epsilon * mu
+    if name == "little":
+        sd = weighted_std(honest_d, hw + 1e-30)
+        if cfg.z_max is not None:
+            z = jnp.asarray(cfg.z_max, honest_d.dtype)
+        else:
+            z = _little_zmax(jnp.sum(hw), jnp.sum(weights * (1.0 - hm)))
+        return mu - z * sd
+    raise KeyError(f"unknown attack: {name}")

@@ -1,0 +1,219 @@
+"""Asynchronous Byzantine parameter-server simulator — paper Algorithm 2.
+
+Faithful event-driven reproduction: one worker arrives per server iteration
+(sampled from an arrival distribution or round-robin), delivers its corrected
+momentum ``d_t^{(i)}``, the server robust-aggregates ALL workers' latest
+buffers weighted by their update counts ``s_t^{(i)}``, applies the AnyTime
+update, and hands the worker the fresh query point.
+
+State layout (flat vectors, d = number of parameters):
+    w, x            (d,)    iterate / AnyTime average (query point)
+    D               (m, d)  latest momentum from each worker (Alg. 2 line 5)
+    S               (m,)    update counts s_t^{(i)}  (the aggregation weights)
+    Xq              (m, d)  last query point handed to each worker (for g̃)
+    t, t_byz        ()      iteration counters (λ accounting, Eq. 6)
+
+The whole server iteration is a single jitted step. Byzantine behaviors follow
+Appendix D: label flipping poisons the worker's labels before the gradient;
+sign flipping negates the transmission; little/empire are omniscient and read
+the honest workers' buffers with their weights.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregators import make_aggregator
+from .attacks import AttackConfig, byzantine_vector, flip_labels
+from ..optim.mu2sgd import OptConfig, anytime_coeff
+
+Array = jnp.ndarray
+Pytree = Any
+
+
+class EngineConfig(NamedTuple):
+    m: int                                  # number of workers
+    byz: tuple                              # tuple of Byzantine worker ids
+    attack: AttackConfig = AttackConfig()
+    agg: str = "ctma:cwmed"                 # aggregator spec
+    lam: float = 0.2                        # λ for the meta-aggregator / trimming
+    opt: OptConfig = OptConfig(name="mu2", lr=0.01, gamma=0.1, beta=0.25)
+    arrival: str = "proportional"           # proportional | squared | uniform | round_robin
+    byz_start_step: int = 0                 # attacks activate after this iteration
+    n_classes: int = 10
+    seed: int = 0
+
+
+class EngineState(NamedTuple):
+    w: Array
+    x: Array
+    D: Array
+    S: Array
+    Xq: Array
+    t: Array
+    t_byz: Array
+    key: Array
+
+
+def arrival_probs(cfg: EngineConfig) -> np.ndarray:
+    ids = np.arange(1, cfg.m + 1, dtype=np.float64)
+    if cfg.arrival == "proportional":
+        p = ids
+    elif cfg.arrival == "squared":
+        p = ids ** 2
+    elif cfg.arrival in ("uniform", "round_robin"):
+        p = np.ones_like(ids)
+    else:
+        raise KeyError(cfg.arrival)
+    return (p / p.sum()).astype(np.float32)
+
+
+def expected_lambda(cfg: EngineConfig) -> float:
+    """Expected fraction of Byzantine updates under the arrival distribution."""
+    p = arrival_probs(cfg)
+    return float(sum(p[i] for i in cfg.byz))
+
+
+class AsyncByzantineEngine:
+    """Runs Alg. 2 for an arbitrary model given a flat loss/grad function.
+
+    Args:
+      cfg: engine configuration.
+      loss_fn: ``loss_fn(flat_params, batch) -> scalar`` — differentiable.
+      d_dim: number of parameters (flattened).
+    """
+
+    def __init__(self, cfg: EngineConfig, loss_fn: Callable[[Array, Any], Array], d_dim: int):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.d_dim = d_dim
+        self.grad_fn = jax.grad(loss_fn)
+        self.value_grad_fn = jax.value_and_grad(loss_fn)
+        self.agg_fn = make_aggregator(cfg.agg, lam=cfg.lam)
+        self.probs = jnp.asarray(arrival_probs(cfg))
+        byz_mask = np.zeros((cfg.m,), bool)
+        for i in cfg.byz:
+            byz_mask[i] = True
+        self.byz_mask = jnp.asarray(byz_mask)
+        self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+
+    # -- initialization ----------------------------------------------------
+    def init(self, params_flat: Array, init_batches: Any) -> EngineState:
+        """Alg. 2 line 2: every worker computes d_1 at x_1 on its own sample.
+
+        ``init_batches`` has leading axis m (one minibatch per worker).
+        """
+        cfg = self.cfg
+        x1 = jnp.asarray(params_flat)
+        # independent buffers: the step donates the state, so no aliasing allowed
+        self._anchor = x1.copy()  # projection center for the compact-K assumption
+
+        def one(i, batch):
+            lk = "y" if "y" in batch else "labels"
+            y = batch[lk]
+            y = jnp.where(self.byz_mask[i] & (cfg.attack.name == "label_flip") & (cfg.byz_start_step <= 0),
+                          flip_labels(y, cfg.n_classes), y)
+            return self.grad_fn(x1, {**batch, lk: y})
+
+        D = jax.vmap(one, in_axes=(0, 0))(jnp.arange(cfg.m), init_batches)
+        if cfg.attack.name == "sign_flip" and cfg.byz_start_step <= 0:
+            D = jnp.where(self.byz_mask[:, None], -D, D)
+        S = jnp.zeros((cfg.m,), jnp.float32)
+        Xq = jnp.broadcast_to(x1, (cfg.m, self.d_dim)).copy()
+        return EngineState(
+            w=x1.copy(), x=x1.copy(), D=D, S=S, Xq=Xq,
+            t=jnp.zeros((), jnp.int32), t_byz=jnp.zeros((), jnp.int32),
+            key=jax.random.PRNGKey(cfg.seed),
+        )
+
+    # -- one server iteration ----------------------------------------------
+    def _step_impl(self, state: EngineState, batch: Any) -> tuple[EngineState, dict]:
+        cfg = self.cfg
+        opt = cfg.opt
+        key, k_arrival = jax.random.split(state.key)
+
+        t_next = state.t + 1
+        if cfg.arrival == "round_robin":
+            i = (state.t % cfg.m).astype(jnp.int32)
+        else:
+            i = jax.random.categorical(k_arrival, jnp.log(self.probs))
+
+        is_byz = self.byz_mask[i] & (t_next > cfg.byz_start_step)
+
+        # --- worker computation (lines 8-10) -------------------------------
+        label_key = "y" if "y" in batch else "labels"
+        y = batch[label_key]
+        y_used = jnp.where(is_byz & (cfg.attack.name == "label_flip"),
+                           flip_labels(y, cfg.n_classes), y)
+        batch_used = {**batch, label_key: y_used}
+
+        query = state.x if opt.name == "mu2" else state.w
+        loss, g = self.value_grad_fn(query, batch_used)
+
+        s_new = state.S[i] + 1.0
+        if opt.name == "mu2":
+            g_tilde = self.grad_fn(state.Xq[i], batch_used)  # same sample z_t
+            beta = (jnp.asarray(opt.beta, jnp.float32) if opt.beta is not None
+                    else 1.0 / jnp.maximum(s_new, 1.0))
+            d_honest = jnp.where(s_new <= 1.0, g, g + (1.0 - beta) * (state.D[i] - g_tilde))
+        elif opt.name == "momentum":
+            beta = 0.9 if opt.beta is None else opt.beta
+            d_honest = beta * state.D[i] + (1.0 - beta) * g
+        else:  # sgd
+            d_honest = g
+
+        atk = byzantine_vector(cfg.attack, state.D, ~self.byz_mask, state.S, d_honest)
+        d_sent = jnp.where(is_byz, atk, d_honest)
+
+        D = state.D.at[i].set(d_sent)
+        S = state.S.at[i].set(s_new)
+        Xq = state.Xq.at[i].set(query)
+
+        # --- server update (lines 4-7) --------------------------------------
+        d_hat = self.agg_fn(D, S)
+        # α_t = t is the AnyTime importance weight — μ²-SGD only (with the
+        # constant-γ practical variant it folds into the learning rate).
+        alpha = (t_next.astype(jnp.float32)
+                 if (opt.name == "mu2" and opt.gamma is None)
+                 else jnp.asarray(1.0, jnp.float32))
+        w_new = state.w - opt.lr * alpha * d_hat
+        if opt.proj_radius is not None:
+            # Π_K: project onto the ball of radius proj_radius around x_1 (compact K)
+            diff = w_new - self._anchor
+            norm = jnp.linalg.norm(diff)
+            w_new = self._anchor + diff * jnp.minimum(1.0, opt.proj_radius / jnp.maximum(norm, 1e-30))
+        if opt.name == "mu2":
+            gcoef = anytime_coeff(t_next + 1, opt.gamma)
+            x_new = state.x + gcoef * (w_new - state.x)
+        else:
+            x_new = w_new
+
+        new_state = EngineState(
+            w=w_new, x=x_new, D=D, S=S, Xq=Xq,
+            t=t_next, t_byz=state.t_byz + is_byz.astype(jnp.int32), key=key,
+        )
+        metrics = {"loss": loss, "worker": i, "is_byz": is_byz,
+                   "lambda_emp": new_state.t_byz / jnp.maximum(t_next, 1)}
+        return new_state, metrics
+
+    def step(self, state: EngineState, batch: Any) -> tuple[EngineState, dict]:
+        return self._step(state, batch)
+
+    def run(self, state: EngineState, batches, steps: int,
+            eval_fn: Optional[Callable[[Array], dict]] = None,
+            eval_every: int = 0) -> tuple[EngineState, list]:
+        """Drive the loop; ``batches`` is an iterator of per-step minibatches."""
+        history = []
+        for k in range(steps):
+            state, metrics = self.step(state, next(batches))
+            if eval_every and (k + 1) % eval_every == 0:
+                rec = {"step": k + 1, "loss": float(metrics["loss"]),
+                       "lambda_emp": float(metrics["lambda_emp"])}
+                if eval_fn is not None:
+                    rec.update(eval_fn(state.x))
+                history.append(rec)
+        return state, history

@@ -1,0 +1,6 @@
+from .synthetic import (  # noqa: F401
+    classification_batches,
+    lm_batches,
+    make_classification_data,
+    worker_batches,
+)

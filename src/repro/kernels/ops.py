@@ -1,0 +1,104 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret=True`` (the default in this CPU container) runs the kernel bodies
+in the Pallas interpreter for correctness validation; on a real TPU deployment
+pass ``interpret=False`` to emit Mosaic kernels. ``use_pallas=False`` falls
+back to the pure-jnp oracle — the path the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from . import ref
+from .wcwmed import wcwmed_pallas
+from .wreduce import sqdist_pallas, wcomb_pallas
+from .swa import swa_decode_pallas
+
+
+def wcwmed(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *,
+           use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """Weighted coordinate-wise median of (m, d) rows."""
+    if s is None:
+        s = jnp.ones((x.shape[0],), jnp.float32)
+    if not use_pallas:
+        return ref.wcwmed_ref(x, s)
+    return wcwmed_pallas(x, s, interpret=interpret)
+
+
+def wgm(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *, iters: int = 8,
+        eps: float = 1e-8, use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """ω-GM via Weiszfeld: kernelized distance pass + reweighted combine."""
+    if s is None:
+        s = jnp.ones((x.shape[0],), jnp.float32)
+    if not use_pallas:
+        return ref.wgm_ref(x, s, iters=iters)
+    y = wcwmed(x, s, use_pallas=True, interpret=interpret)
+    for _ in range(iters):
+        dist = jnp.sqrt(jnp.maximum(sqdist_pallas(x, y, interpret=interpret), 0.0))
+        invd = s.astype(jnp.float32) / jnp.maximum(dist, eps)
+        y = wcomb_pallas(x, invd, jnp.sum(invd), interpret=interpret)
+    return y
+
+
+def wctma(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *, lam: float,
+          use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """ω-CTMA (Alg. 1): anchor (kernel) + distances (kernel) + trimmed combine
+    (kernel); the m-element sort/prefix stays in XLA — it is O(m log m) scalars."""
+    if s is None:
+        s = jnp.ones((x.shape[0],), jnp.float32)
+    if not use_pallas:
+        return ref.wctma_ref(x, s, lam)
+    x0 = wcwmed(x, s, use_pallas=True, interpret=interpret)
+    dist = sqdist_pallas(x, x0, interpret=interpret)
+    order = jnp.argsort(dist)
+    sw = s.astype(jnp.float32)[order]
+    cum = jnp.cumsum(sw)
+    thresh = (1.0 - lam) * cum[-1]
+    prev = jnp.concatenate([jnp.zeros_like(cum[:1]), cum[:-1]])
+    kept_sorted = jnp.clip(thresh - prev, 0.0, sw)
+    kept = jnp.zeros_like(kept_sorted).at[order].set(kept_sorted)
+    return wcomb_pallas(x, kept, thresh, interpret=interpret)
+
+
+def swa_decode(q, k_cache, v_cache, pos, *, local: bool,
+               use_pallas: bool = True, interpret: bool = True):
+    """Flash single-token decode over a (ring) KV cache."""
+    if not use_pallas:
+        return ref.swa_decode_ref(q, k_cache, v_cache, pos, local=local)
+    return swa_decode_pallas(q, k_cache, v_cache, pos, local=local, interpret=interpret)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int, *, use_pallas: bool = True,
+             interpret: bool = True):
+    """Mamba-2 SSD scan: Pallas intra-chunk kernel + XLA inter-chunk
+    recurrence. Semantics identical to models.ssm.ssd_chunked."""
+    if not use_pallas:
+        return ref.ssd_ref(x, dt, A, Bm, Cm, chunk)
+    from .ssd import ssd_intra_pallas
+
+    y_diag, states, chunk_decay = ssd_intra_pallas(x, dt, A, Bm, Cm,
+                                                   chunk=chunk, interpret=interpret)
+    b, s, h, p = x.shape
+    nc = s // chunk
+    n = Bm.shape[-1]
+
+    import jax
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp
+        return carry * dec[..., None, None] + st, carry
+
+    last, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (b, nc, h, p, n)
+
+    a = (dt * A[None, None, :]).reshape(b, nc, chunk, h)
+    a_cum = jnp.cumsum(jnp.moveaxis(a, -1, -2), axis=-1)    # (b, nc, h, c)
+    state_decay = jnp.exp(a_cum)
+    Cc = Cm.reshape(b, nc, chunk, n)
+    y_off = jnp.einsum("bzcn,bzhpn,bzhc->bzchp", Cc, prev_states, state_decay)
+    y = y_diag + y_off.reshape(b, s, h, p)
+    return y, last

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the dry-run/production jnp path).
+
+These are the ground truth the kernels are swept against in
+tests/test_kernels.py, and simply delegate to the library reference
+implementations so kernel == library semantics by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.aggregators import (weighted_ctma, weighted_cwmed, weighted_gm,
+                                    weighted_mean)
+from repro.models.config import ModelConfig
+from repro.models.layers import _sdpa
+from repro.models.ssm import ssd_chunked
+
+
+def wcwmed_ref(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    return weighted_cwmed(x.astype(jnp.float32), s.astype(jnp.float32))
+
+
+def sqdist_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    d = x.astype(jnp.float32) - y.astype(jnp.float32)[None]
+    return jnp.sum(jnp.square(d), axis=1)
+
+
+def wcomb_ref(x: jnp.ndarray, coef: jnp.ndarray, denom) -> jnp.ndarray:
+    return jnp.einsum("m,md->d", coef.astype(jnp.float32),
+                      x.astype(jnp.float32)) / denom
+
+
+def wgm_ref(x: jnp.ndarray, s: jnp.ndarray, iters: int = 8) -> jnp.ndarray:
+    return weighted_gm(x.astype(jnp.float32), s.astype(jnp.float32), iters=iters)
+
+
+def wctma_ref(x: jnp.ndarray, s: jnp.ndarray, lam: float) -> jnp.ndarray:
+    return weighted_ctma(x.astype(jnp.float32), s.astype(jnp.float32), lam=lam)
+
+
+def swa_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                   pos: jnp.ndarray, *, local: bool) -> jnp.ndarray:
+    """Mirror of models.layers.attention_decode's masked SDPA (post-rope)."""
+    B, H, hd = q.shape
+    W = k_cache.shape[1]
+    idx = jnp.arange(W)
+    if local:
+        valid = (idx <= pos % W) | (pos >= W)
+    else:
+        valid = idx <= pos
+    cfg = ModelConfig(n_heads=H, n_kv=k_cache.shape[2], head_dim=hd)
+    out = _sdpa(cfg, q[:, None], k_cache, v_cache, valid[None, None, None, :])
+    return out.reshape(B, H, hd).astype(jnp.float32)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk):
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash attention for single-token decode over a
+(sliding-window) KV cache.
+
+Grid = (batch·kv_head, cache_blocks). The KV cache streams through VMEM one
+(bw, hd) block per grid step while the online-softmax state (running max,
+denominator, accumulator) lives in VMEM scratch that persists across the
+sequential TPU grid — the working set is O(G·hd + bw·hd) regardless of cache
+length. This is the long_500k decode hot loop for gemma-style local layers
+and recurrentgemma attention blocks.
+
+Ring-buffer semantics: slot validity is derived from the absolute position
+``pos`` exactly as in the reference (`repro.models.layers.attention_decode`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_W = 256
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, W: int, bw: int, local: bool):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    hd = q.shape[-1]
+    pos = pos_ref[0]
+    scale = hd ** -0.5
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k = k_ref[0].astype(jnp.float32)                  # (bw, hd)
+    v = v_ref[0].astype(jnp.float32)
+    scores = (q @ k.T) * scale                        # (G, bw)
+    idx = c * bw + jax.lax.iota(jnp.int32, bw)
+    if local:
+        valid = (idx <= pos % W) | (pos >= W)         # ring buffer occupancy
+    else:
+        valid = idx <= pos                            # causal prefix
+    scores = jnp.where(valid[None, :], scores, -1e30)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = alpha * acc_ref[...] + p @ v
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("local", "block_w", "interpret"))
+def swa_decode_pallas(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                      pos: jnp.ndarray, *, local: bool, block_w: int = DEFAULT_BLOCK_W,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, hd); k/v_cache: (B, W, KV, hd); pos: () int32 -> (B, H, hd).
+
+    Keys/values are assumed already rotary-embedded (cache layout identical to
+    the reference decode path)."""
+    B, H, hd = q.shape
+    _, W, KV, _ = k_cache.shape
+    G = H // KV
+    bw = min(block_w, W)
+    assert W % bw == 0, "cache length must divide the block"
+    qg = q.reshape(B * KV, G, hd)
+    kg = jnp.moveaxis(k_cache, 2, 1).reshape(B * KV, W, hd)
+    vg = jnp.moveaxis(v_cache, 2, 1).reshape(B * KV, W, hd)
+    pos_arr = jnp.broadcast_to(pos.astype(jnp.int32), (1,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, W=W, bw=bw, local=local),
+        grid=(B * KV, W // bw),
+        in_specs=[
+            pl.BlockSpec((1,), lambda g, c: (0,)),
+            pl.BlockSpec((1, G, hd), lambda g, c: (g, 0, 0)),
+            pl.BlockSpec((1, bw, hd), lambda g, c: (g, c, 0)),
+            pl.BlockSpec((1, bw, hd), lambda g, c: (g, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda g, c: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max
+            pltpu.VMEM((G, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((G, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, kg, vg)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernels shared by ω-GM (Weiszfeld) and ω-CTMA:
+
+- ``sqdist``: per-worker squared distances to an anchor, Σ_d (x_id - y_d)²,
+  accumulated across d-tiles into an (m,) output (TPU grids execute
+  sequentially, so revisiting the same output block is the canonical
+  reduction pattern).
+- ``wcomb``: weighted combination Σ_i c_i x_i / z over d-tiles — the Weiszfeld
+  re-weighted average and the CTMA trimmed mean are both this matvec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 1024
+
+
+def _sqdist_kernel(x_ref, y_ref, o_ref):
+    j = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)     # (m, bd)
+    y = y_ref[...].astype(jnp.float32)     # (1, bd)
+    part = jnp.sum(jnp.square(x - y), axis=1, keepdims=True)  # (m, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sqdist_pallas(x: jnp.ndarray, y: jnp.ndarray, *, block_d: int = DEFAULT_BLOCK_D,
+                  interpret: bool = True) -> jnp.ndarray:
+    """x: (m, d), y: (d,) -> (m,) squared distances (float32)."""
+    m, d = x.shape
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, pad),))[None, :]
+    out = pl.pallas_call(
+        _sqdist_kernel,
+        grid=((d + pad) // bd,),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda j: (0, j)),
+            pl.BlockSpec((1, bd), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:, 0]
+
+
+def _wcomb_kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)     # (m, bd)
+    c = c_ref[...].astype(jnp.float32)     # (m, 1)
+    o_ref[...] = jnp.sum(c * x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def wcomb_pallas(x: jnp.ndarray, coef: jnp.ndarray, denom, *,
+                 block_d: int = DEFAULT_BLOCK_D, interpret: bool = True) -> jnp.ndarray:
+    """Σ_i coef_i x_i / denom. x: (m, d), coef: (m,) -> (d,)."""
+    m, d = x.shape
+    bd = min(block_d, d)
+    pad = (-d) % bd
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _wcomb_kernel,
+        grid=((d + pad) // bd,),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda j: (0, j)),
+            pl.BlockSpec((m, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((d + pad,), jnp.float32),
+        interpret=interpret,
+    )(xp, coef.astype(jnp.float32)[:, None])
+    return out[:d] / denom

@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input — the
+zero-allocation interface used by the multi-pod dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, InputShape
+from repro.dist.sharding import batch_sharding, cache_sharding, param_sharding, replicated
+from repro.dist.steps import RobustDPConfig, TrainState, init_train_state
+from repro.models.config import ModelConfig
+from repro.models.lm import init_cache, init_lm
+from repro.optim.mu2sgd import OptConfig
+from repro.launch.mesh import dp_axes
+
+Pytree = Any
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if shape.mode == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    if cfg.frontend == "audio":
+        out = {"frames": sds((B, S, cfg.d_model), dt)}
+        if shape.mode == "train":
+            out["labels"] = sds((B, S), jnp.int32)
+        return out
+    if cfg.frontend == "vision":
+        S_text = S - cfg.n_patches
+        out = {"patches": sds((B, cfg.n_patches, cfg.d_model), dt),
+               "tokens": sds((B, S_text), jnp.int32)}
+        if shape.mode == "train":
+            out["labels"] = sds((B, S_text), jnp.int32)
+        return out
+    out = {"tokens": sds((B, S), jnp.int32)}
+    if shape.mode == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(partial(init_lm, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape) -> Pytree:
+    return jax.eval_shape(partial(init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: OptConfig,
+                      robust: Optional[RobustDPConfig] = None) -> Pytree:
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0), robust))
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def _strip_axes(spec: P, banned: set) -> P:
+    def clean(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a not in banned)
+            return kept if kept else None
+        return None if entry in banned else entry
+    return P(*(clean(e) for e in spec))
+
+
+def train_state_sharding(cfg: ModelConfig, mesh, state_shape: TrainState) -> TrainState:
+    pshard = param_sharding(cfg, mesh, state_shape.opt.w)
+    scalar = NamedSharding(mesh, P())
+
+    def like_params(tree_shape):
+        if tree_shape is None:
+            return None
+        return param_sharding(cfg, mesh, tree_shape)
+
+    opt = state_shape.opt._replace(
+        w=pshard,
+        x=like_params(state_shape.opt.x),
+        x_prev=like_params(state_shape.opt.x_prev),
+        d=like_params(state_shape.opt.d),
+        t=scalar,
+        anchor=like_params(state_shape.opt.anchor),
+    )
+    D = None
+    counts = None
+    if state_shape.D is not None:
+        dp = dp_axes(mesh)
+        banned = set(dp)
+        base = param_sharding(cfg, mesh, state_shape.opt.w)
+        D = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, P(dp, *_strip_axes(s.spec, banned))), base)
+        counts = NamedSharding(mesh, P())
+    return TrainState(opt=opt, D=D, counts=counts)
+
+
+def logits_sharding(cfg: ModelConfig, mesh, shape) -> NamedSharding:
+    """(B, S, V): batch over dp, vocab over model (when divisible)."""
+    from repro.dist.sharding import _fits
+    dp = dp_axes(mesh)
+    spec = [None, None, None]
+    if _fits(shape[0], mesh, dp):
+        spec[0] = dp
+    if _fits(shape[-1], mesh, ("model",)):
+        spec[-1] = "model"
+    return NamedSharding(mesh, P(*spec))
+
+
+def make_all_specs(cfg: ModelConfig, mesh, shape: InputShape, opt_cfg: OptConfig,
+                   robust: Optional[RobustDPConfig] = None, with_out: bool = True):
+    """Returns (arg_shapes, in_shardings, out_shardings) for the step kind.
+
+    Output shardings are pinned to the input layouts (state/cache round-trip
+    in place); without this XLA re-replicates the updated KV cache every step
+    (§Perf iteration 1: a full cache all-gather per layer, per decoded token).
+    """
+    if shape.mode == "train":
+        state_shape = train_state_specs(cfg, opt_cfg, robust)
+        state_shard = train_state_sharding(cfg, mesh, state_shape)
+        b_shape = batch_specs(cfg, shape)
+        b_shard = batch_sharding(cfg, mesh, b_shape)
+        out = (state_shard, NamedSharding(mesh, P())) if with_out else None
+        return (state_shape, b_shape), (state_shard, b_shard), out
+    if shape.mode == "prefill":
+        p_shape = params_specs(cfg)
+        p_shard = param_sharding(cfg, mesh, p_shape)
+        b_shape = batch_specs(cfg, shape)
+        b_shard = batch_sharding(cfg, mesh, b_shape)
+        out = None
+        if with_out:
+            c_shape = cache_specs(cfg, shape)
+            c_shard = cache_sharding(cfg, mesh, c_shape)
+            B, S = shape.global_batch, shape.seq_len
+            S_out = S - (cfg.n_patches if cfg.frontend == "vision" else 0)
+            lsh = logits_sharding(cfg, mesh, (B, S_out, cfg.vocab))
+            out = (lsh, c_shard)
+        return (p_shape, b_shape), (p_shard, b_shard), out
+    # decode: weight-stationary contraction sharding (see dist/sharding.py)
+    p_shape = params_specs(cfg)
+    p_shard = param_sharding(cfg, mesh, p_shape, mode="decode")
+    c_shape = cache_specs(cfg, shape)
+    c_shard = cache_sharding(cfg, mesh, c_shape)
+    b_shape = batch_specs(cfg, shape)
+    b_shard = batch_sharding(cfg, mesh, b_shape)
+    out = None
+    if with_out:
+        lsh = logits_sharding(cfg, mesh, (shape.global_batch, 1, cfg.vocab))
+        out = (lsh, c_shard)
+    return ((p_shape, c_shape, b_shape["tokens"]),
+            (p_shard, c_shard, b_shard["tokens"]), out)

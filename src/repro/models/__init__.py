@@ -1,0 +1,10 @@
+from .config import ModelConfig  # noqa: F401
+from .lm import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_lm,
+    lm_loss,
+    param_count,
+    prefill,
+)

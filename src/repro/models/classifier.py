@@ -1,0 +1,102 @@
+"""Small classifiers for the paper-faithful experiments (Appendix D).
+
+``cnn`` mirrors the paper's two-conv architecture; ``mlp`` is a cheap variant
+for fast CI benchmarks. Pure functions over param dicts; losses are
+cross-entropy as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierConfig:
+    name: str = "paper-cnn"
+    kind: str = "cnn"              # cnn | mlp
+    image_hw: Tuple[int, int] = (28, 28)
+    channels: int = 1
+    n_classes: int = 10
+    conv_filters: Tuple[int, int] = (20, 50)
+    fc_hidden: int = 50
+    mlp_hidden: Tuple[int, ...] = (64,)
+
+
+def _conv_out_hw(cfg: ClassifierConfig) -> Tuple[int, int]:
+    h, w = cfg.image_hw
+    h = (h - 4) // 2  # conv 5x5 valid + maxpool 2
+    w = (w - 4) // 2
+    h = (h - 4) // 2
+    w = (w - 4) // 2
+    return h, w
+
+
+def init_classifier(key, cfg: ClassifierConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    if cfg.kind == "mlp":
+        dims = (cfg.image_hw[0] * cfg.image_hw[1] * cfg.channels,
+                *cfg.mlp_hidden, cfg.n_classes)
+        return {f"w{i}": jax.random.normal(ks[i], (a, b)) * a ** -0.5
+                for i, (a, b) in enumerate(zip(dims[:-1], dims[1:]))} | {
+                f"b{i}": jnp.zeros((b,)) for i, b in enumerate(dims[1:])}
+    c1, c2 = cfg.conv_filters
+    h, w = _conv_out_hw(cfg)
+    flat = h * w * c2
+    return {
+        "conv1": jax.random.normal(ks[0], (c1, cfg.channels, 5, 5)) * (25 * cfg.channels) ** -0.5,
+        "bc1": jnp.zeros((c1,)),
+        "conv2": jax.random.normal(ks[1], (c2, c1, 5, 5)) * (25 * c1) ** -0.5,
+        "bc2": jnp.zeros((c2,)),
+        "fc1": jax.random.normal(ks[2], (flat, cfg.fc_hidden)) * flat ** -0.5,
+        "bf1": jnp.zeros((cfg.fc_hidden,)),
+        "norm_scale": jnp.ones((cfg.fc_hidden,)),
+        "norm_bias": jnp.zeros((cfg.fc_hidden,)),
+        "fc2": jax.random.normal(ks[3], (cfg.fc_hidden, cfg.n_classes)) * cfg.fc_hidden ** -0.5,
+        "bf2": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _maxpool2(x: Array) -> Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def apply_classifier(params: dict, cfg: ClassifierConfig, x: Array) -> Array:
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        n = len([k for k in params if k.startswith("w")])
+        for i in range(n):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+        return h
+    h = jnp.transpose(x, (0, 3, 1, 2))  # NCHW
+    h = jax.lax.conv_general_dilated(h, params["conv1"], (1, 1), "VALID") + params["bc1"][None, :, None, None]
+    h = _maxpool2(jax.nn.relu(h))
+    h = jax.lax.conv_general_dilated(h, params["conv2"], (1, 1), "VALID") + params["bc2"][None, :, None, None]
+    h = _maxpool2(jax.nn.relu(h))
+    h = h.reshape(h.shape[0], -1)
+    h = h @ params["fc1"] + params["bf1"]
+    # batch-norm-like normalization (inference-style, per feature)
+    mu = jnp.mean(h, axis=0, keepdims=True)
+    var = jnp.mean(jnp.square(h - mu), axis=0, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"] + params["norm_bias"]
+    h = jax.nn.relu(h)
+    return h @ params["fc2"] + params["bf2"]
+
+
+def classifier_loss(params: dict, cfg: ClassifierConfig, batch: dict) -> Array:
+    logits = apply_classifier(params, cfg, batch["x"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=-1))
+
+
+def classifier_accuracy(params: dict, cfg: ClassifierConfig, batch: dict) -> Array:
+    logits = apply_classifier(params, cfg, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

@@ -1,0 +1,94 @@
+"""RecurrentGemma / Griffin recurrent block: RG-LRU + temporal conv
+(arXiv:2402.19427). Training/prefill uses an associative scan (log-depth on
+TPU); decode keeps an O(1) recurrent state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jnp.ndarray
+
+_LRU_C = 8.0  # the paper's fixed exponent scale
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in_gate": (jax.random.normal(ks[0], (d, w)) * d ** -0.5).astype(dtype),
+        "w_in_branch": (jax.random.normal(ks[1], (d, w)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": (jax.random.normal(ks[3], (w, w)) * w ** -0.5).astype(dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_x": (jax.random.normal(ks[4], (w, w)) * w ** -0.5).astype(dtype),
+        "b_x": jnp.zeros((w,), dtype),
+        "lam": (jnp.ones((w,)) * 2.0).astype(dtype),  # softplus(2) ≈ 2.1 -> slow decay
+        "w_out": (jax.random.normal(ks[5], (w, d)) * w ** -0.5).astype(dtype),
+    }
+
+
+def _conv1d(seq: Array, w: Array, b: Array) -> Array:
+    K = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + seq.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def _rglru_coeffs(p: dict, u: Array) -> tuple[Array, Array]:
+    """Per-step decay a_t and input b_t for h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_a"]).astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_x"]).astype(jnp.float32)
+                       + p["b_x"].astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = gate * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_block(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    """Full-sequence Griffin recurrent block. x: (B, S, d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in_branch"])
+    u = _conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = _rglru_coeffs(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", h * gate, p["w_out"])
+
+
+class LRUCache(NamedTuple):
+    conv: Array  # (B, conv_width-1, w)
+    h: Array     # (B, w) float32
+
+
+def init_lru_cache(cfg: ModelConfig, batch: int, dtype) -> LRUCache:
+    w = cfg.lru_width or cfg.d_model
+    return LRUCache(conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+                    h=jnp.zeros((batch, w), jnp.float32))
+
+
+def rglru_decode(p: dict, cfg: ModelConfig, x: Array, cache: LRUCache
+                 ) -> tuple[Array, LRUCache]:
+    """Single-token decode. x: (B, 1, d)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"]))[:, 0]
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in_branch"])[:, 0]      # (B, w)
+    hist = jnp.concatenate([cache.conv, u[:, None]], axis=1)
+    u = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    a, b = _rglru_coeffs(p, u)
+    h = a * cache.h + b
+    out = jnp.einsum("bw,wd->bd", h.astype(x.dtype) * gate, p["w_out"])[:, None]
+    return out, LRUCache(conv=hist[:, 1:], h=h)

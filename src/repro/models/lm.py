@@ -1,0 +1,475 @@
+"""Language-model assembly: embeddings → (scanned) layer groups → logits.
+
+Layers are organized as  [prefix (unrolled)] + [n_full groups (lax.scan)] +
+[remainder (unrolled)]  where one group = the architecture's repeating
+pattern (e.g. gemma3's 5 local + 1 global, recurrentgemma's rec,rec,attn).
+Scanning groups keeps compile time flat in depth; `cfg.remat` wraps each
+group in jax.checkpoint (activation recomputation).
+
+Three execution modes per layer kind:
+  forward        — full-sequence training/eval
+  prefill        — forward + emit decode cache
+  decode         — single token with cache
+
+Modality frontends (audio frames / vision patches) are stubs per the
+assignment carve-out: batches carry precomputed embeddings of width d_model.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .griffin import init_lru_cache, init_rglru, rglru_block, rglru_decode
+from .layers import attention, attention_decode, init_attention, init_mlp, make_mask, mlp, rms_norm, rope_angles, apply_rope, _qkv, _sdpa
+from .moe import init_moe, moe_block
+from .ssm import init_ssm, init_ssm_cache, ssm_block, ssm_decode
+
+Array = jnp.ndarray
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> tuple[list[str], int, list[str]]:
+    """Returns (prefix_kinds, n_full_groups, remainder_kinds)."""
+    kinds = list(cfg.layer_kinds())
+    g = len(cfg.pattern)
+    if not cfg.scan_layers or g >= len(kinds):
+        return kinds, 0, []
+    n_full = len(kinds) // g
+    rem = kinds[n_full * g:]
+    return [], n_full, rem
+
+
+def _mlp_kind(cfg: ModelConfig, kind: str) -> Optional[str]:
+    if kind == "ssm":
+        return None  # Mamba-2 blocks have no separate MLP
+    if cfg.arch_type == "moe":
+        return "moe"
+    return "dense"
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind == "ssm":
+        p["mix"] = init_ssm(k1, cfg, dtype)
+        return p
+    if kind == "rec":
+        p["mix"] = init_rglru(k1, cfg, dtype)
+    else:
+        p["mix"] = init_attention(k1, cfg, dtype)
+    p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+    if _mlp_kind(cfg, kind) == "moe":
+        p["mlp"] = init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Pytree:
+    dtype = jnp.dtype(cfg.dtype)
+    prefix, n_full, rem = layer_plan(cfg)
+    kE, kP, kG, kR, kU = jax.random.split(key, 5)
+    params: dict = {
+        "embed": (jax.random.normal(kE, (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(kU, (cfg.d_model, cfg.vocab))
+                             * cfg.d_model ** -0.5).astype(dtype)
+    if prefix:
+        params["prefix"] = [
+            _init_layer(k, cfg, kind, dtype)
+            for k, kind in zip(jax.random.split(kP, len(prefix)), prefix)]
+    if n_full:
+        def one_group(k):
+            return [
+                _init_layer(kk, cfg, kind, dtype)
+                for kk, kind in zip(jax.random.split(k, len(cfg.pattern)), cfg.pattern)]
+        params["groups"] = jax.vmap(one_group)(jax.random.split(kG, n_full))
+    if rem:
+        params["rem"] = [
+            _init_layer(k, cfg, kind, dtype)
+            for k, kind in zip(jax.random.split(kR, len(rem)), rem)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Single-layer forward (three modes)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(lp: dict, cfg: ModelConfig, kind: str, x: Array) -> tuple[Array, Array]:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        return x + ssm_block(lp["mix"], cfg, h), jnp.zeros((), jnp.float32)
+    if kind == "rec":
+        x = x + rglru_block(lp["mix"], cfg, h)
+    else:
+        x = x + attention(lp["mix"], cfg, h, kind)
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if _mlp_kind(cfg, kind) == "moe":
+        y, aux = moe_block(lp["mlp"], cfg, h2)
+    else:
+        y = mlp(lp["mlp"], h2)
+    return x + y, aux
+
+
+def _attn_prefill(lp: dict, cfg: ModelConfig, kind: str, x: Array, cache_len: int
+                  ) -> tuple[Array, tuple[Array, Array]]:
+    """Attention forward that also emits the (ring-layout) KV cache."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(lp, cfg, x)
+    pos = jnp.arange(S)
+    cos, sin = rope_angles(pos, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    mask = make_mask(cfg, S, kind)
+    out = _sdpa(cfg, q, k, v, mask)
+    out = jnp.einsum("bsh,hd->bsd", out, lp["wo"])
+    W = cache_len
+    kc = jnp.zeros((B, W, cfg.n_kv, cfg.hd), k.dtype)
+    vc = jnp.zeros((B, W, cfg.n_kv, cfg.hd), v.dtype)
+    if kind == "local":
+        take = min(W, S)
+        src_pos = jnp.arange(S - take, S)
+        kc = kc.at[:, src_pos % W].set(k[:, -take:])
+        vc = vc.at[:, src_pos % W].set(v[:, -take:])
+    else:
+        take = min(W, S)
+        kc = kc.at[:, :take].set(k[:, :take])
+        vc = vc.at[:, :take].set(v[:, :take])
+    return out, (kc, vc)
+
+
+def _layer_prefill(lp, cfg, kind, x, cache_len):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        out, cache = _ssm_prefill(lp["mix"], cfg, h)
+        return x + out, cache
+    if kind == "rec":
+        out, cache = _rec_prefill(lp["mix"], cfg, h)
+        x = x + out
+    else:
+        W = cfg.window if kind == "local" else cache_len
+        out, cache = _attn_prefill(lp["mix"], cfg, kind, h, W)
+        x = x + out
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if _mlp_kind(cfg, kind) == "moe":
+        y, _ = moe_block(lp["mlp"], cfg, h2)
+    else:
+        y = mlp(lp["mlp"], h2)
+    return x + y, cache
+
+
+def _ssm_prefill(p, cfg, x):
+    """Run ssm_block while capturing the final recurrent + conv state."""
+    from .ssm import SSMCache, _conv1d  # local import to reuse internals
+    B_, S, _ = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    zxbcdt = jnp.einsum("bsd,do->bso", x, p["in_proj"])
+    z, xc, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    Kw = cfg.conv_width
+    conv_cache = jnp.zeros((B_, Kw - 1, di + 2 * N), x.dtype)
+    take = min(Kw - 1, S)
+    conv_cache = conv_cache.at[:, Kw - 1 - take:].set(conv_in[:, S - take:])
+    conv_out = jax.nn.silu(_conv1d(conv_in, p["conv_w"], p["conv_b"]))
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(B_, S, H, P)
+    y, final_state = ssm_chunked_pad(xh.astype(jnp.float32), dt, A,
+                                     Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+                                     cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, SSMCache(conv=conv_cache, state=final_state)
+
+
+def ssm_chunked_pad(x, dt, A, Bm, Cm, chunk):
+    """ssd_chunked that right-pads the sequence to a chunk multiple."""
+    from .ssm import ssd_chunked
+    s = x.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y[:, :s], state
+
+
+def _rec_prefill(p, cfg, x):
+    from .griffin import LRUCache, _conv1d, _rglru_coeffs
+    B_, S, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"]))
+    u0 = jnp.einsum("bsd,dw->bsw", x, p["w_in_branch"])
+    Kw = cfg.conv_width
+    conv_cache = jnp.zeros((B_, Kw - 1, w), x.dtype)
+    take = min(Kw - 1, S)
+    conv_cache = conv_cache.at[:, Kw - 1 - take:].set(u0[:, S - take:])
+    u = _conv1d(u0, p["conv_w"], p["conv_b"])
+    a, b = _rglru_coeffs(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    out = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype) * gate, p["w_out"])
+    return out, LRUCache(conv=conv_cache, h=h[:, -1])
+
+
+def _layer_decode(lp, cfg, kind, x, cache, pos):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        out, cache = ssm_decode(lp["mix"], cfg, h, cache)
+        return x + out, cache
+    if kind == "rec":
+        out, cache = rglru_decode(lp["mix"], cfg, h, cache)
+        x = x + out
+    else:
+        kc, vc = cache
+        out, kc, vc = attention_decode(lp["mix"], cfg, h, kind, kc, vc, pos)
+        cache = (kc, vc)
+        x = x + out
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if _mlp_kind(cfg, kind) == "moe":
+        y, _ = moe_block(lp["mlp"], cfg, h2)
+    else:
+        y = mlp(lp["mlp"], h2)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: Pytree, cfg: ModelConfig, batch: dict) -> Array:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(dtype)
+    tok = params["embed"][batch["tokens"]] * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if cfg.frontend == "vision":
+        return jnp.concatenate([batch["patches"].astype(dtype), tok], axis=1)
+    return tok
+
+
+def logits_from_hidden(params: Pytree, cfg: ModelConfig, x: Array) -> Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+
+
+# ---------------------------------------------------------------------------
+# Full forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params: Pytree, cfg: ModelConfig, batch: dict) -> tuple[Array, Array]:
+    """Returns (logits, aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+    prefix, n_full, rem = layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    layer_fwd = (jax.checkpoint(_layer_fwd, static_argnums=(1, 2))
+                 if cfg.remat else _layer_fwd)
+
+    for lp, kind in zip(params.get("prefix", []), prefix):
+        x, aux = layer_fwd(lp, cfg, kind, x)
+        aux_total = aux_total + aux
+
+    if n_full:
+        def group_body(x, gp):
+            a = jnp.zeros((), jnp.float32)
+            for lp, kind in zip(gp, cfg.pattern):
+                x, ax = _layer_fwd(lp, cfg, kind, x)
+                a = a + ax
+            return x, a
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body)
+        x, auxs = jax.lax.scan(group_body, x, params["groups"])
+        aux_total = aux_total + jnp.sum(auxs)
+
+    for lp, kind in zip(params.get("rem", []), rem):
+        x, aux = layer_fwd(lp, cfg, kind, x)
+        aux_total = aux_total + aux
+
+    if cfg.frontend == "vision":
+        x = x[:, -batch["tokens"].shape[1]:]  # logits over text positions only
+    return logits_from_hidden(params, cfg, x), aux_total
+
+
+def lm_loss(params: Pytree, cfg: ModelConfig, batch: dict) -> Array:
+    """Next-token (or frame-label) cross entropy, mean over valid positions."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0) + aux
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+def _kind_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    if kind == "ssm":
+        return init_ssm_cache(cfg, batch, dtype)
+    if kind == "rec":
+        return init_lru_cache(cfg, batch, dtype)
+    W = cfg.window if kind == "local" else max_len
+    kc = jnp.zeros((batch, W, cfg.n_kv, cfg.hd), dtype)
+    return (kc, kc)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    prefix, n_full, rem = layer_plan(cfg)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if prefix:
+        cache["prefix"] = [_kind_cache(cfg, k, batch, max_len, dtype) for k in prefix]
+    if n_full:
+        one = [_kind_cache(cfg, k, batch, max_len, dtype) for k in cfg.pattern]
+        cache["groups"] = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (n_full,) + l.shape).copy(), one)
+    if rem:
+        cache["rem"] = [_kind_cache(cfg, k, batch, max_len, dtype) for k in rem]
+    return cache
+
+
+def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int
+            ) -> tuple[Array, dict]:
+    """Full forward over the prompt, emitting logits and the decode cache."""
+    x = embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    prefix, n_full, rem = layer_plan(cfg)
+    cache: dict = {}
+
+    if prefix:
+        cps = []
+        for lp, kind in zip(params["prefix"], prefix):
+            x, cp = _layer_prefill(lp, cfg, kind, x, max_len)
+            cps.append(cp)
+        cache["prefix"] = cps
+
+    if n_full:
+        def group_body(x, gp):
+            cs = []
+            for lp, kind in zip(gp, cfg.pattern):
+                x, cp = _layer_prefill(lp, cfg, kind, x, max_len)
+                cs.append(cp)
+            return x, tuple(cs)
+        x, gcache = jax.lax.scan(group_body, x, params["groups"])
+        cache["groups"] = list(gcache)
+
+    if rem:
+        crs = []
+        for lp, kind in zip(params["rem"], rem):
+            x, cp = _layer_prefill(lp, cfg, kind, x, max_len)
+            crs.append(cp)
+        cache["rem"] = crs
+
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    if cfg.frontend == "vision":
+        x = x[:, -batch["tokens"].shape[1]:]
+    return logits_from_hidden(params, cfg, x), cache
+
+
+def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array
+                ) -> tuple[Array, dict]:
+    """One decode step. tokens: (B, 1) int32. Returns (logits (B,1,V), cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    prefix, n_full, rem = layer_plan(cfg)
+    new_cache: dict = {"pos": pos + 1}
+
+    if prefix:
+        cps = []
+        for lp, kind, cp in zip(params["prefix"], prefix, cache["prefix"]):
+            x, cp = _layer_decode(lp, cfg, kind, x, cp, pos)
+            cps.append(cp)
+        new_cache["prefix"] = cps
+
+    if n_full:
+        def group_body(x, gp_cache):
+            gp, gc = gp_cache
+            cs = []
+            for lp, kind, cp in zip(gp, cfg.pattern, gc):
+                x, cp = _layer_decode(lp, cfg, kind, x, cp, pos)
+                cs.append(cp)
+            return x, tuple(cs)
+        x, gcache = jax.lax.scan(group_body, x, (params["groups"], tuple(cache["groups"])))
+        new_cache["groups"] = list(gcache)
+
+    if rem:
+        crs = []
+        for lp, kind, cp in zip(params["rem"], rem, cache["rem"]):
+            x, cp = _layer_decode(lp, cfg, kind, x, cp, pos)
+            crs.append(cp)
+        new_cache["rem"] = crs
+
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter count (for config validation tests)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    n = cfg.vocab * d  # embed
+    if not cfg.tie_embeddings:
+        n += d * cfg.vocab
+    n += d  # final norm
+    for kind in cfg.layer_kinds():
+        n += d  # ln1
+        if kind == "ssm":
+            di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            n += d * (2 * di + 2 * N + H)           # in_proj
+            n += cfg.conv_width * (di + 2 * N) + (di + 2 * N)
+            n += 3 * H + di + di * d                # a_log, dt_bias, d_skip, norm, out
+            continue
+        if kind == "rec":
+            w = cfg.lru_width or d
+            n += 2 * d * w + cfg.conv_width * w + w
+            n += 2 * (w * w + w) + w + w * d
+        else:
+            n += d * cfg.n_heads * hd + 2 * d * cfg.n_kv * hd + cfg.n_heads * hd * d
+            if cfg.qkv_bias:
+                n += cfg.n_heads * hd + 2 * cfg.n_kv * hd
+            if cfg.qk_norm:
+                n += 2 * hd
+        n += d  # ln2
+        if _mlp_kind(cfg, kind) == "moe":
+            n += d * cfg.n_experts
+            n += cfg.n_experts * (2 * d * cfg.d_expert + cfg.d_expert * d)
+            if cfg.n_shared:
+                n += 3 * d * cfg.n_shared * cfg.d_expert
+        else:
+            n += 3 * d * cfg.d_ff
+    return n

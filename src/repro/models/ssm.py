@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block in JAX.
+
+Chunked SSD algorithm: within a chunk the recurrence is computed in its dual
+"masked attention" quadratic form (MXU-friendly); across chunks a linear state
+recurrence carries (H, P, N) states. Decode keeps an O(1) recurrent state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.n_ssm_heads
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (di), x (di), B (N), C (N), dt (H)]  (single B/C group)
+    proj_out = 2 * di + 2 * N + H
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di + 2 * N)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "d_skip": jnp.ones((H,), dtype),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5).astype(dtype),
+    }
+    return p
+
+
+def _segsum(a: Array) -> Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum_{k=j+1..i} a[..., k]."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array, chunk: int,
+                init_state: Array | None = None) -> tuple[Array, Array]:
+    """SSD scan.
+
+    x:  (b, s, h, p) input heads
+    dt: (b, s, h)    positive step sizes
+    A:  (h,)         negative decay rates (continuous-time)
+    Bm: (b, s, n)    input projection (single group, shared across heads)
+    Cm: (b, s, n)    output projection
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    c = chunk
+    nc = s // c
+    assert s % c == 0, "sequence must be divisible by the SSD chunk"
+
+    a = dt * A[None, None, :]                     # (b, s, h) log-decay per step (<0)
+    xb = (x * dt[..., None]).reshape(b, nc, c, h, p)
+    a = a.reshape(b, nc, c, h)
+    B = Bm.reshape(b, nc, c, n)
+    C = Cm.reshape(b, nc, c, n)
+
+    a_hc = jnp.moveaxis(a, -1, -2)                # (b, nc, h, c)
+    a_cum = jnp.cumsum(a_hc, axis=-1)             # (b, nc, h, c)
+
+    # --- intra-chunk (dual quadratic form) ---
+    L = jnp.exp(_segsum(a_hc))                    # (b, nc, h, c, c)
+    scores = jnp.einsum("bzin,bzjn->bzij", C, B)  # (b, nc, c, c)
+    y_diag = jnp.einsum("bzij,bzhij,bzjhp->bzihp", scores, L, xb)
+
+    # --- chunk states ---
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (b, nc, h, c)
+    states = jnp.einsum("bzcn,bzhc,bzchp->bzhpn", B, decay_states, xb)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(a_cum[..., -1])                     # (b, nc, h)
+    s0 = jnp.zeros((b, h, p, n), x.dtype) if init_state is None else init_state
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    last, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (b, nc, h, p, n)
+
+    # --- inter-chunk output ---
+    state_decay = jnp.exp(a_cum)                              # (b, nc, h, c)
+    y_off = jnp.einsum("bzcn,bzhpn,bzhc->bzchp", C, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, last
+
+
+class SSMCache(NamedTuple):
+    conv: Array   # (B, conv_width-1, di + 2N) rolling conv inputs
+    state: Array  # (B, H, P, N)
+
+
+def _conv1d(seq: Array, w: Array, b: Array) -> Array:
+    """Causal depthwise conv. seq: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + seq.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def ssm_block(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    """Full-sequence forward. x: (B, S, d)."""
+    B_, S, _ = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    zxbcdt = jnp.einsum("bsd,do->bso", x, p["in_proj"])
+    z, xc, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_conv1d(conv_in, p["conv_w"], p["conv_b"]))
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(B_, S, H, P)
+    if cfg.use_pallas_ssm and S % cfg.ssm_chunk == 0:
+        from repro.kernels.ops import ssd_scan
+        y, _ = ssd_scan(xh.astype(jnp.float32), dt, A, Bc.astype(jnp.float32),
+                        Cc.astype(jnp.float32), cfg.ssm_chunk,
+                        interpret=cfg.pallas_interpret)
+    else:
+        y, _ = ssd_chunked(xh.astype(jnp.float32), dt, A, Bc.astype(jnp.float32),
+                           Cc.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)  # gated norm (simplified RMSNorm-gate)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di + 2 * N), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssm_decode(p: dict, cfg: ModelConfig, x: Array, cache: SSMCache
+               ) -> tuple[Array, SSMCache]:
+    """Single-token decode. x: (B, 1, d)."""
+    B_ = x.shape[0]
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    zxbcdt = jnp.einsum("bsd,do->bso", x, p["in_proj"])[:, 0]
+    z, xc, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)          # (B, C)
+    hist = jnp.concatenate([cache.conv, conv_in[:, None]], axis=1)  # (B, K, C)
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"])
+    new_conv = hist[:, 1:]
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B, H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A[None, :])                           # (B, H)
+    xh = xc.reshape(B_, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, Bc.astype(jnp.float32), dt)
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cc.astype(jnp.float32))
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, di).astype(x.dtype) * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None]
+    return out, SSMCache(conv=new_conv, state=state)

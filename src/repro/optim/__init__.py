@@ -1,0 +1,8 @@
+from .mu2sgd import (  # noqa: F401
+    OptConfig,
+    OptState,
+    anytime_coeff,
+    init_opt,
+    opt_query_points,
+    opt_update,
+)

@@ -1,0 +1,97 @@
+"""Shared small utilities: pytree flattening, PRNG helpers, logging."""
+from __future__ import annotations
+
+import logging
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+logger = logging.getLogger("repro")
+if not logger.handlers:
+    _h = logging.StreamHandler()
+    _h.setFormatter(logging.Formatter("[%(asctime)s %(name)s] %(message)s", "%H:%M:%S"))
+    logger.addHandler(_h)
+    logger.setLevel(logging.INFO)
+
+
+def ravel_pytree_fn(tree: Pytree) -> tuple[jnp.ndarray, Callable[[jnp.ndarray], Pytree]]:
+    """Like jax.flatten_util.ravel_pytree but returns (flat, unravel)."""
+    from jax.flatten_util import ravel_pytree
+
+    flat, unravel = ravel_pytree(tree)
+    return flat, unravel
+
+
+def tree_size(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: Pytree, y: Pytree) -> Pytree:
+    """alpha*x + y."""
+    return jax.tree_util.tree_map(lambda u, v: alpha * u + v, x, y)
+
+
+def tree_sqnorm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(tree_sqnorm(tree))
+
+
+def split_key(key, n: int):
+    return jax.random.split(key, n)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def timeit_median(fn: Callable[[], Any], iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of fn(); blocks on jax arrays."""
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

@@ -1,0 +1,191 @@
+"""Unit + property tests for the weighted robust aggregation rules (§3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bucketing, c_lambda, krum, make_aggregator, weighted_ctma,
+                        weighted_cwmed, weighted_cwtm, weighted_gm, weighted_mean,
+                        weighted_median_1d, weighted_std)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(m, d, seed=0):
+    k = jax.random.fold_in(KEY, seed)
+    k1, k2 = jax.random.split(k)
+    x = jax.random.normal(k1, (m, d))
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    return x, s
+
+
+# ---------------------------------------------------------------------------
+# correctness vs numpy
+# ---------------------------------------------------------------------------
+
+def test_cwmed_equal_weights_matches_numpy_median():
+    x, _ = _rand(9, 40)
+    np.testing.assert_allclose(np.asarray(weighted_cwmed(x)),
+                               np.median(np.asarray(x), axis=0), atol=1e-6)
+
+
+def test_cwmed_even_m_tie_averages_middles():
+    x, _ = _rand(8, 40, seed=1)
+    np.testing.assert_allclose(np.asarray(weighted_cwmed(x)),
+                               np.median(np.asarray(x), axis=0), atol=1e-6)
+
+
+def test_weighted_median_1d_textbook():
+    v = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    s = jnp.asarray([1.0, 1.0, 1.0, 5.0])  # heavy weight on 4
+    assert float(weighted_median_1d(v, s)) == 4.0
+    s2 = jnp.asarray([5.0, 1.0, 1.0, 1.0])
+    assert float(weighted_median_1d(v, s2)) == 1.0
+
+
+def test_weighted_mean_std():
+    x, s = _rand(7, 13)
+    xn, sn = np.asarray(x, np.float64), np.asarray(s, np.float64)
+    mu = (sn[:, None] * xn).sum(0) / sn.sum()
+    np.testing.assert_allclose(np.asarray(weighted_mean(x, s)), mu, rtol=1e-5)
+    var = (sn[:, None] * (xn - mu) ** 2).sum(0) / sn.sum()
+    np.testing.assert_allclose(np.asarray(weighted_std(x, s)), np.sqrt(var), rtol=1e-4)
+
+
+def test_gm_stationarity():
+    """At the geometric median the weighted subgradient vanishes."""
+    x, s = _rand(9, 25)
+    y = np.asarray(weighted_gm(x, s, iters=64))
+    xn, sn = np.asarray(x, np.float64), np.asarray(s, np.float64)
+    dist = np.linalg.norm(xn - y, axis=1)
+    sub = ((sn / dist)[:, None] * (xn - y)).sum(0)
+    assert np.linalg.norm(sub) < 1e-3
+
+
+def test_ctma_lam0_is_weighted_mean():
+    x, s = _rand(11, 30)
+    np.testing.assert_allclose(np.asarray(weighted_ctma(x, s, lam=0.0)),
+                               np.asarray(weighted_mean(x, s)), atol=1e-5)
+
+
+def test_ctma_trims_far_outlier():
+    x, s = _rand(10, 20)
+    x = x.at[0].set(1e6)  # gross outlier, weight fraction 's[0]/sum' < lam
+    s = s.at[0].set(0.5)
+    out = weighted_ctma(x, s, lam=0.3)
+    assert float(jnp.max(jnp.abs(out))) < 10.0
+
+
+def test_cwtm_trims_tails():
+    x = jnp.concatenate([jnp.zeros((8, 5)), jnp.full((2, 5), 1e9)], axis=0)
+    out = weighted_cwtm(x, None, lam=0.25)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-3)
+
+
+def test_krum_picks_clustered_point():
+    x = jnp.concatenate([jnp.zeros((6, 4)), jnp.full((2, 4), 100.0)], axis=0)
+    out = krum(x, n_byz=2)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_bucketing_runs_and_bounded():
+    x, s = _rand(9, 16)
+    out = bucketing(x, s, bucket=3)
+    assert out.shape == (16,) and bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_c_lambda_table():
+    """Table 1: base rules (1+λ/(1-2λ))²; CTMA multiplies by 60λ(1+·) -> O(λ)."""
+    for lam in (0.1, 0.2, 0.3):
+        base = c_lambda("cwmed", lam)
+        meta = c_lambda("ctma:cwmed", lam)
+        assert base == pytest.approx((1 + lam / (1 - 2 * lam)) ** 2)
+        assert meta == pytest.approx(60 * lam * (1 + base))
+    # CTMA is O(λ): asymptotically below the O(1) base coefficient
+    assert c_lambda("ctma:cwmed", 0.001) < c_lambda("cwmed", 0.001)
+    assert c_lambda("ctma:cwmed", 1e-5) / c_lambda("ctma:cwmed", 1e-6) == pytest.approx(10, rel=0.01)
+
+
+def test_registry_all_specs():
+    x, s = _rand(8, 12)
+    from repro.core import AGGREGATOR_SPECS
+    for spec in AGGREGATOR_SPECS:
+        out = make_aggregator(spec, lam=0.25)(x, s)
+        assert out.shape == (12,)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+@st.composite
+def points_weights(draw, max_m=12, max_d=8):
+    m = draw(st.integers(3, max_m))
+    d = draw(st.integers(1, max_d))
+    x = draw(st.lists(st.lists(st.floats(-100, 100), min_size=d, max_size=d),
+                      min_size=m, max_size=m))
+    s = draw(st.lists(st.floats(0.0625, 10.0), min_size=m, max_size=m))
+    return jnp.asarray(x, jnp.float32), jnp.asarray(s, jnp.float32)
+
+
+AGGS = {
+    "mean": lambda x, s: weighted_mean(x, s),
+    "cwmed": lambda x, s: weighted_cwmed(x, s),
+    "gm": lambda x, s: weighted_gm(x, s, iters=16),
+    "ctma": lambda x, s: weighted_ctma(x, s, lam=0.2),
+}
+
+
+@settings(max_examples=25, deadline=None)
+@given(points_weights(), st.sampled_from(sorted(AGGS)))
+def test_permutation_invariance(xw, name):
+    x, s = xw
+    perm = np.random.default_rng(0).permutation(x.shape[0])
+    a = AGGS[name](x, s)
+    b = AGGS[name](x[perm], s[perm])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(points_weights(), st.sampled_from(sorted(AGGS)))
+def test_translation_equivariance(xw, name):
+    x, s = xw
+    v = jnp.full((x.shape[1],), 7.5)
+    a = AGGS[name](x + v, s)
+    b = AGGS[name](x, s) + v
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(points_weights())
+def test_median_within_honest_range_under_attack(xw):
+    """If honest weight mass > 1/2, the weighted median stays inside the honest
+    hull per coordinate no matter what the Byzantine rows contain."""
+    x, s = xw
+    m = x.shape[0]
+    n_byz = (m - 1) // 2
+    byz = jnp.arange(m) < n_byz
+    # Byzantine weight strictly below half:
+    s = jnp.where(byz, 0.9 * jnp.sum(s[~byz]) / jnp.maximum(n_byz, 1) / 2, s)
+    x_atk = jnp.where(byz[:, None], 1e30, x)
+    out = weighted_cwmed(x_atk, s)
+    hon = np.asarray(x)[n_byz:]
+    assert np.all(np.asarray(out) <= hon.max(0) + 1e-4)
+    assert np.all(np.asarray(out) >= hon.min(0) - 1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(points_weights())
+def test_weight_splitting_invariance(xw):
+    """Splitting one input's weight across two identical rows is a no-op —
+    the core soundness property of *weighted* aggregation (Def. 3.1)."""
+    x, s = xw
+    x2 = jnp.concatenate([x, x[:1]], axis=0)
+    s2 = jnp.concatenate([s.at[0].mul(0.5), s[:1] * 0.5])
+    for name in ("mean", "cwmed", "ctma"):
+        a = AGGS[name](x, s)
+        b = AGGS[name](x2, s2)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3,
+                                   err_msg=name)

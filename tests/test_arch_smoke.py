@@ -1,0 +1,108 @@
+"""Per-architecture smoke tests: the REDUCED same-family config runs one
+forward + one μ²-SGD train step on CPU, asserting shapes and finiteness.
+Decode-capable archs also run one prefill + decode step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config, SHAPES, shape_applicable
+from repro.data import lm_batches
+from repro.dist.steps import init_train_state, make_prefill_step, make_serve_step, make_train_step
+from repro.models import forward, init_lm
+from repro.optim import OptConfig
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    return next(lm_batches(cfg, B, S, seed=0))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    assert cfg.n_layers <= 6 and cfg.d_model <= 512 and cfg.n_experts <= 4
+    opt_cfg = OptConfig(name="mu2", lr=1e-2, gamma=0.1, beta=0.25)
+    state = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in _batch(cfg).items()}
+
+    logits, aux = forward(state.opt.w, cfg, batch)
+    exp_S = S if cfg.frontend != "vision" else S
+    assert logits.shape == (B, exp_S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state2.opt.t) == 1
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(state.opt.w),
+                        jax.tree_util.tree_leaves(state2.opt.w)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode(arch):
+    cfg = smoke_config(arch)
+    if not cfg.supports_decode():
+        pytest.skip("encoder-only: no decode (documented in DESIGN.md)")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    max_len = S + 4
+    batch = {k: jnp.asarray(v) for k, v in _batch(cfg).items() if k != "labels"}
+    logits, cache = jax.jit(make_prefill_step(cfg, max_len))(params, batch)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    serve = jax.jit(make_serve_step(cfg))
+    for _ in range(3):
+        logits, cache = serve(params, cache, tok)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+
+def test_full_configs_match_assignment_table():
+    spec = {
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+    }
+    for arch, (L, d, H, kv, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+                cfg.vocab) == (L, d, H, kv, ff, V), arch
+
+
+def test_moe_configs():
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.n_experts, q.top_k, q.n_shared) == (60, 4, 4)
+    k = get_config("kimi-k2-1t-a32b")
+    assert (k.n_experts, k.top_k) == (384, 8)
+
+
+def test_shape_applicability_table():
+    expected_skips = {
+        "hubert-xlarge": {"decode_32k", "long_500k"},
+        "qwen2-moe-a2.7b": {"long_500k"},
+        "recurrentgemma-9b": set(),
+        "qwen2-1.5b": {"long_500k"},
+        "gemma3-4b": set(),
+        "kimi-k2-1t-a32b": {"long_500k"},
+        "gemma3-27b": set(),
+        "internvl2-1b": {"long_500k"},
+        "codeqwen1.5-7b": {"long_500k"},
+        "mamba2-1.3b": set(),
+    }
+    for arch, skips in expected_skips.items():
+        cfg = get_config(arch)
+        got = {s for s in SHAPES if not shape_applicable(cfg, s)[0]}
+        assert got == skips, (arch, got)

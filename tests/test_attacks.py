@@ -1,0 +1,60 @@
+"""Attack suite tests (Appendix D adaptations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AttackConfig, byzantine_vector, flip_labels, weighted_mean, weighted_std
+
+
+def _setup(m=8, d=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    D = jax.random.normal(k, (m, d))
+    honest = jnp.asarray([True] * 6 + [False] * 2)
+    s = jnp.arange(1, m + 1, dtype=jnp.float32)
+    own = D[-1]
+    return D, honest, s, own
+
+
+def test_sign_flip():
+    D, honest, s, own = _setup()
+    out = byzantine_vector(AttackConfig("sign_flip"), D, honest, s, own)
+    np.testing.assert_allclose(np.asarray(out), -np.asarray(own))
+
+
+def test_label_flip_transform():
+    y = jnp.asarray([0, 3, 9])
+    np.testing.assert_array_equal(np.asarray(flip_labels(y, 10)), [9, 6, 0])
+    # transmission itself is protocol-honest
+    D, honest, s, own = _setup()
+    out = byzantine_vector(AttackConfig("label_flip"), D, honest, s, own)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(own))
+
+
+def test_empire_scaled_negative_weighted_mean():
+    D, honest, s, own = _setup()
+    out = byzantine_vector(AttackConfig("empire", epsilon=0.1), D, honest, s, own)
+    hw = s * honest
+    mu = weighted_mean(D, hw + 1e-30)
+    np.testing.assert_allclose(np.asarray(out), -0.1 * np.asarray(mu), rtol=1e-5)
+
+
+def test_little_within_spread():
+    """ALIE perturbs by z_max weighted std below the weighted mean —
+    coordinate-wise, and stays within a few std of the honest mean."""
+    D, honest, s, own = _setup()
+    out = byzantine_vector(AttackConfig("little"), D, honest, s, own)
+    hw = s * honest
+    mu = np.asarray(weighted_mean(D, hw + 1e-30))
+    sd = np.asarray(weighted_std(D, hw + 1e-30))
+    dev = np.abs(np.asarray(out) - mu) / (sd + 1e-9)
+    assert np.all(dev < 5.0)
+    assert np.all(np.asarray(out) <= mu + 1e-6)  # subtractive direction
+
+
+def test_little_explicit_zmax():
+    D, honest, s, own = _setup()
+    out = byzantine_vector(AttackConfig("little", z_max=1.5), D, honest, s, own)
+    hw = s * honest
+    mu = np.asarray(weighted_mean(D, hw + 1e-30))
+    sd = np.asarray(weighted_std(D, hw + 1e-30))
+    np.testing.assert_allclose(np.asarray(out), mu - 1.5 * sd, rtol=1e-4, atol=1e-5)

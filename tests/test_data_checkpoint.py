@@ -1,0 +1,64 @@
+"""Data pipeline determinism + checkpoint round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_pytree, save_pytree
+from repro.data import classification_batches, lm_batches, make_classification_data, worker_batches
+from repro.models import ModelConfig, init_lm
+
+
+def test_classification_deterministic_and_separable():
+    d1 = make_classification_data(256, seed=3)
+    d2 = make_classification_data(256, seed=3)
+    np.testing.assert_array_equal(d1["x"], d2["x"])
+    # classes are actually separable: nearest-mean classifier beats chance
+    means = np.stack([d1["x"][d1["y"] == c].mean(0) for c in range(10)])
+    dists = ((d1["x"][:, None] - means[None]) ** 2).sum((2, 3, 4))
+    acc = (dists.argmin(1) == d1["y"]).mean()
+    assert acc > 0.5
+
+
+def test_batch_iterators():
+    it = classification_batches(16, seed=0)
+    b = next(it)
+    assert b["x"].shape == (16, 28, 28, 1) and b["y"].shape == (16,)
+    wb = worker_batches(5, 4, seed=0)
+    assert wb["x"].shape == (5, 4, 28, 28, 1)
+
+
+def test_lm_stream_learnable_structure():
+    cfg = ModelConfig(vocab=97)
+    b = next(lm_batches(cfg, 8, 64, seed=0))
+    toks, labels = b["tokens"], b["labels"]
+    # labels are the next-token shift and mostly follow the affine rule
+    pred = (31 * toks + 17) % 97
+    agree = (pred == labels).mean()
+    assert agree > 0.8
+
+
+def test_frontend_batches():
+    audio = ModelConfig(frontend="audio", d_model=32, vocab=10)
+    b = next(lm_batches(audio, 2, 16))
+    assert b["frames"].shape == (2, 16, 32)
+    vlm = ModelConfig(frontend="vision", d_model=32, vocab=50, n_patches=4)
+    b = next(lm_batches(vlm, 2, 16))
+    assert b["patches"].shape == (2, 4, 32) and b["tokens"].shape == (2, 16)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv=2, d_ff=64, vocab=32)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    save_pytree(params, tmp_path, step=7)
+    assert latest_step(tmp_path) == 7
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored = restore_pytree(zeros, tmp_path)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_pytree({"a": jnp.zeros((3,))}, tmp_path, step=1)
+    import pytest
+    with pytest.raises(ValueError):
+        restore_pytree({"a": jnp.zeros((4,))}, tmp_path)

@@ -1,0 +1,66 @@
+"""Integration: the dry-run machinery end-to-end in a subprocess with a small
+placeholder-device mesh (8 devices, 2x2 / 2x2x2). Exercises lowering, SPMD
+compile, cost/memory analysis and the collective-bytes parser for one arch per
+step kind. The full 512-device production sweep is run by
+`python -m repro.launch.dryrun --all` (see EXPERIMENTS.md §Dry-run)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(args, devices="8"):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"),
+               REPRO_DRYRUN_DEVICES=devices)
+    return subprocess.run([sys.executable, "-m", "repro.launch.dryrun", *args],
+                          env=env, capture_output=True, text=True, timeout=900)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen2-1.5b", "train_4k"),
+    ("mamba2-1.3b", "long_500k"),
+    ("internvl2-1b", "prefill_32k"),
+])
+def test_dryrun_debug_mesh(arch, shape):
+    r = _run(["--arch", arch, "--shape", shape, "--debug-mesh"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_dryrun_multi_pod_debug_mesh():
+    r = _run(["--arch", "qwen2-1.5b", "--shape", "decode_32k", "--debug-mesh",
+              "--multi-pod"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_dryrun_robust_mode():
+    r = _run(["--arch", "qwen2-1.5b", "--shape", "train_4k", "--debug-mesh",
+              "--robust"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_dryrun_skip_reasons():
+    r = _run(["--arch", "hubert-xlarge", "--shape", "decode_32k", "--debug-mesh"])
+    assert r.returncode == 0
+    assert "SKIP" in r.stdout and "encoder-only" in r.stdout
+    r = _run(["--arch", "codeqwen1.5-7b", "--shape", "long_500k", "--debug-mesh"])
+    assert r.returncode == 0
+    assert "SKIP" in r.stdout and "sub-quadratic" in r.stdout
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %all-gather.1 = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %p0), replica_groups={}
+  %x = f32[8]{0} add(f32[8]{0} %a, f32[8]{0} %b)
+  ROOT %all-reduce.2 = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%sum
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 128 * 4 * 2  # counted for both ring phases
+    assert out["total"] == out["all-gather"] + out["all-reduce"]

@@ -1,0 +1,108 @@
+"""Asynchronous Byzantine engine (Alg. 2) integration tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncByzantineEngine, AttackConfig, EngineConfig,
+                        arrival_probs, expected_lambda)
+from repro.optim import OptConfig
+
+D_DIM = 20
+WSTAR = jnp.full((D_DIM,), 3.0)
+
+
+def loss_fn(w, batch):
+    return 0.5 * jnp.mean(jnp.sum((w - WSTAR - batch["x"]) ** 2, -1)) \
+        + 0.0 * jnp.sum(batch["y"])
+
+
+def _batch(rng, b=4):
+    return {"x": jnp.asarray(rng.normal(size=(b, D_DIM)), jnp.float32),
+            "y": jnp.zeros((b,), jnp.int32)}
+
+
+def _init_batches(rng, m, b=4):
+    return {"x": jnp.asarray(rng.normal(size=(m, b, D_DIM)), jnp.float32),
+            "y": jnp.zeros((m, b), jnp.int32)}
+
+
+def _run(cfg, steps=400, seed=0):
+    eng = AsyncByzantineEngine(cfg, loss_fn, D_DIM)
+    rng = np.random.default_rng(seed)
+    st = eng.init(jnp.zeros((D_DIM,)), _init_batches(rng, cfg.m))
+    for _ in range(steps):
+        st, m = eng.step(st, _batch(rng))
+    return st, m
+
+
+def test_arrival_distributions():
+    for mode, expect in [("proportional", np.arange(1, 10) / 45),
+                         ("squared", np.arange(1, 10) ** 2 / 285),
+                         ("uniform", np.full(9, 1 / 9))]:
+        p = arrival_probs(EngineConfig(m=9, byz=(), arrival=mode))
+        np.testing.assert_allclose(p, expect, rtol=1e-5)
+
+
+def test_expected_lambda_matches_empirical():
+    cfg = EngineConfig(m=9, byz=(7, 8), arrival="proportional",
+                       attack=AttackConfig("sign_flip"), agg="cwmed", lam=0.4,
+                       opt=OptConfig(name="mu2", lr=0.02, gamma=0.1, beta=0.25))
+    st, m = _run(cfg, steps=600)
+    lam_exp = expected_lambda(cfg)
+    assert lam_exp < 0.5
+    assert abs(float(m["lambda_emp"]) - lam_exp) < 0.07
+
+
+def test_round_robin_visits_all_workers():
+    cfg = EngineConfig(m=6, byz=(), arrival="round_robin", agg="mean", lam=0.0,
+                       opt=OptConfig(name="mu2", lr=0.02, gamma=0.1, beta=0.25))
+    eng = AsyncByzantineEngine(cfg, loss_fn, D_DIM)
+    rng = np.random.default_rng(0)
+    st = eng.init(jnp.zeros((D_DIM,)), _init_batches(rng, 6))
+    for _ in range(12):
+        st, _ = eng.step(st, _batch(rng))
+    np.testing.assert_array_equal(np.asarray(st.S), np.full(6, 2.0))
+
+
+@pytest.mark.parametrize("attack,agg", [
+    ("sign_flip", "ctma:cwmed"),
+    ("label_flip", "ctma:gm"),
+    ("little", "ctma:cwmed"),
+    ("empire", "gm"),
+])
+def test_converges_under_attack(attack, agg):
+    cfg = EngineConfig(m=9, byz=(7, 8), attack=AttackConfig(attack), agg=agg,
+                       lam=0.38, arrival="proportional",
+                       opt=OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25))
+    st, _ = _run(cfg, steps=500)
+    assert float(jnp.linalg.norm(st.x - WSTAR)) < 0.8
+
+
+def test_weighted_beats_unweighted_under_imbalance():
+    """Fig. 2/5: with arrivals ∝ id² and fast honest workers, weighting by
+    update counts beats uniform weights."""
+    errs = {}
+    for weighted in (True, False):
+        cfg = EngineConfig(m=9, byz=(0, 1, 2), attack=AttackConfig("sign_flip"),
+                           agg="cwmed", lam=0.2, arrival="squared",
+                           opt=OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25))
+        eng = AsyncByzantineEngine(cfg, loss_fn, D_DIM)
+        if not weighted:
+            inner = eng.agg_fn
+            eng.agg_fn = lambda D, S: inner(D, jnp.ones_like(S))
+            eng._step = jax.jit(eng._step_impl, donate_argnums=(0,))
+        rng = np.random.default_rng(1)
+        st = eng.init(jnp.zeros((D_DIM,)), _init_batches(rng, 9))
+        for _ in range(500):
+            st, _ = eng.step(st, _batch(rng))
+        errs[weighted] = float(jnp.linalg.norm(st.x - WSTAR))
+    assert errs[True] <= errs[False] + 0.05, errs
+
+
+def test_sgd_and_momentum_modes_run():
+    for opt in (OptConfig(name="sgd", lr=0.02), OptConfig(name="momentum", lr=0.02, beta=0.9)):
+        cfg = EngineConfig(m=5, byz=(4,), attack=AttackConfig("sign_flip"),
+                           agg="cwmed", lam=0.3, opt=opt)
+        st, m = _run(cfg, steps=200)
+        assert bool(jnp.all(jnp.isfinite(st.w)))

@@ -1,0 +1,118 @@
+"""Pallas kernel sweeps: shapes × dtypes, assert_allclose vs the pure-jnp
+oracles (interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.wreduce import sqdist_pallas, wcomb_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES_MD = [(3, 7), (5, 128), (9, 512), (16, 1000), (32, 2048), (8, 513)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_wcwmed_sweep(m, d, dtype):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, m * d))
+    x = jax.random.normal(k1, (m, d)).astype(dtype)
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    np.testing.assert_allclose(np.asarray(ops.wcwmed(x, s)),
+                               np.asarray(ref.wcwmed_ref(x, s)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD[:4])
+def test_wcwmed_tie_handling(m, d):
+    x = jax.random.normal(jax.random.fold_in(KEY, d), (m, d))
+    s = jnp.ones((m,))  # even m hits the exact S/2 prefix tie
+    np.testing.assert_allclose(np.asarray(ops.wcwmed(x, s)),
+                               np.median(np.asarray(x), axis=0), atol=1e-6)
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD)
+def test_sqdist_and_wcomb(m, d):
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, 7 * m + d), 3)
+    x = jax.random.normal(k1, (m, d))
+    y = jax.random.normal(k2, (d,))
+    c = jax.random.uniform(k3, (m,), minval=0.0, maxval=2.0)
+    np.testing.assert_allclose(np.asarray(sqdist_pallas(x, y)),
+                               np.asarray(ref.sqdist_ref(x, y)), rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(wcomb_pallas(x, c, 3.7)),
+                               np.asarray(ref.wcomb_ref(x, c, 3.7)), rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD[:4])
+def test_wgm_kernel_matches_oracle(m, d):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, m + d))
+    x = jax.random.normal(k1, (m, d))
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    np.testing.assert_allclose(np.asarray(ops.wgm(x, s, iters=8)),
+                               np.asarray(ref.wgm_ref(x, s, iters=8)),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD[:4])
+@pytest.mark.parametrize("lam", [0.1, 0.3])
+def test_wctma_kernel_matches_oracle(m, d, lam):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 3 * m + d))
+    x = jax.random.normal(k1, (m, d))
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    np.testing.assert_allclose(np.asarray(ops.wctma(x, s, lam=lam)),
+                               np.asarray(ref.wctma_ref(x, s, lam)),
+                               atol=1e-5, rtol=1e-5)
+
+
+SWA_CASES = [
+    # B, H, KV, hd, W, local, pos
+    (2, 8, 2, 64, 512, True, 100),
+    (2, 8, 2, 64, 512, True, 5000),   # wrapped ring
+    (1, 4, 4, 128, 256, False, 255),
+    (2, 16, 1, 64, 1024, True, 37),
+    (1, 2, 2, 32, 256, False, 0),     # first token
+]
+
+
+@pytest.mark.parametrize("B,H,KV,hd,W,local,pos", SWA_CASES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+def test_swa_decode_sweep(B, H, KV, hd, W, local, pos, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.fold_in(KEY, B * H * W + pos), 3)
+    q = jax.random.normal(k1, (B, H, hd)).astype(dtype)
+    kc = jax.random.normal(k2, (B, W, KV, hd)).astype(dtype)
+    vc = jax.random.normal(k3, (B, W, KV, hd)).astype(dtype)
+    p = jnp.asarray(pos, jnp.int32)
+    got = ops.swa_decode(q, kc, vc, p, local=local)
+    want = ref.swa_decode_ref(q, kc, vc, p, local=local)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 10), st.integers(1, 50), st.integers(0, 10_000))
+def test_wcwmed_property_random(m, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (m, d))
+    s = jax.random.uniform(k2, (m,), minval=0.05, maxval=5.0)
+    np.testing.assert_allclose(np.asarray(ops.wcwmed(x, s)),
+                               np.asarray(ref.wcwmed_ref(x, s)), atol=1e-5)
+
+
+SSD_CASES = [(2, 32, 4, 8, 16, 8), (1, 64, 8, 16, 32, 16), (2, 128, 2, 4, 8, 32)]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,c", SSD_CASES)
+def test_ssd_kernel_matches_oracle(b, s, h, p, n, c):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * h + b), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y1, st1 = ops.ssd_scan(x, dt, A, B, C, c)
+    y0, st0 = ref.ssd_ref(x, dt, A, B, C, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st1), np.asarray(st0), atol=1e-3, rtol=1e-3)

@@ -1,0 +1,85 @@
+"""μ²-SGD optimizer properties (Levy 2023 / paper §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import OptConfig, init_opt, opt_query_points, opt_update
+
+
+def quad_grad(w, key, sigma=0.5):
+    wstar = jnp.full_like(w, 3.0)
+    return (w - wstar) + sigma * jax.random.normal(key, w.shape)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgd", {}),
+    ("momentum", {"beta": 0.9}),
+    ("mu2", {"gamma": 0.1, "beta": 0.25}),
+    ("mu2", {"gamma": None, "beta": None}),          # theory schedule α_t=t, β=1/t
+    ("mu2", {"gamma": 0.1, "beta": 0.25, "implicit_x_prev": True}),
+])
+def test_converges_on_quadratic(name, kw):
+    cfg = OptConfig(name=name, lr=0.05, **kw)
+    params = {"w": jnp.zeros((12,))}
+    state = init_opt(cfg, params)
+    key = jax.random.PRNGKey(0)
+    for t in range(300):
+        key, k = jax.random.split(key)
+        x_t, x_prev = opt_query_points(cfg, state)
+        g = {"w": quad_grad(x_t["w"], k)}
+        g_tilde = {"w": quad_grad(x_prev["w"], k)} if name == "mu2" else None
+        lr_scale = 1.0 / (t + 1) if (name == "mu2" and cfg.gamma is None) else 1.0
+        state = opt_update(cfg, state, g, g_tilde, lr_scale=lr_scale)
+    final = state.x["w"] if name == "mu2" else state.w["w"]
+    assert float(jnp.linalg.norm(final - 3.0)) < 0.6
+
+
+def test_implicit_x_prev_matches_explicit():
+    """The inverted AnyTime recursion must reproduce the stored x_prev exactly."""
+    kw = dict(lr=0.03, gamma=0.1, beta=0.25)
+    c_exp = OptConfig(name="mu2", **kw)
+    c_imp = OptConfig(name="mu2", implicit_x_prev=True, **kw)
+    params = {"w": jnp.arange(8.0)}
+    s_exp, s_imp = init_opt(c_exp, params), init_opt(c_imp, params)
+    key = jax.random.PRNGKey(1)
+    for t in range(25):
+        key, k = jax.random.split(key)
+        xe, xpe = opt_query_points(c_exp, s_exp)
+        xi, xpi = opt_query_points(c_imp, s_imp)
+        np.testing.assert_allclose(np.asarray(xpi["w"]), np.asarray(xpe["w"]),
+                                   rtol=1e-5, atol=1e-5)
+        g = {"w": quad_grad(xe["w"], k)}
+        gt_e = {"w": quad_grad(xpe["w"], k)}
+        gt_i = {"w": quad_grad(xpi["w"], k)}
+        s_exp = opt_update(c_exp, s_exp, g, gt_e)
+        s_imp = opt_update(c_imp, s_imp, g, gt_i)
+    assert s_imp.x_prev is None  # the memory actually is saved
+
+
+def test_anytime_average_identity():
+    """x_T equals the α-weighted average of the iterates w_1..w_T (α_t = t)."""
+    cfg = OptConfig(name="mu2", lr=0.01, gamma=None, beta=None)
+    params = {"w": jnp.zeros((4,))}
+    state = init_opt(cfg, params)
+    key = jax.random.PRNGKey(2)
+    ws = [np.asarray(state.w["w"])]
+    for t in range(30):
+        key, k = jax.random.split(key)
+        x_t, x_prev = opt_query_points(cfg, state)
+        g = {"w": quad_grad(x_t["w"], k)}
+        gt = {"w": quad_grad(x_prev["w"], k)}
+        state = opt_update(cfg, state, g, gt, lr_scale=1.0 / (t + 1))
+        ws.append(np.asarray(state.w["w"]))
+    alphas = np.arange(1, len(ws) + 1)
+    expect = (alphas[:, None] * np.stack(ws)).sum(0) / alphas.sum()
+    np.testing.assert_allclose(np.asarray(state.x["w"]), expect, rtol=1e-4, atol=1e-5)
+
+
+def test_projection_keeps_ball():
+    cfg = OptConfig(name="sgd", lr=10.0, proj_radius=1.0)
+    params = {"w": jnp.zeros((6,))}
+    state = init_opt(cfg, params)
+    for _ in range(5):
+        state = opt_update(cfg, state, {"w": jnp.ones((6,))})
+        assert float(jnp.linalg.norm(state.w["w"])) <= 1.0 + 1e-5

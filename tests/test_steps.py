@@ -1,0 +1,90 @@
+"""Train-step integration: standard μ²-SGD and the robust-DP path, including
+fault injection — a Byzantine group must not derail training when the robust
+aggregator is on, and must visibly hurt with plain mean aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import lm_batches
+from repro.dist.steps import (RobustDPConfig, init_train_state, make_robust_train_step,
+                              make_train_step)
+from repro.models import ModelConfig
+from repro.optim import OptConfig
+
+TINY = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+                   d_ff=128, vocab=64)
+
+
+def _run(step_fn, state, data, steps):
+    losses = []
+    step_fn = jax.jit(step_fn)
+    for _ in range(steps):
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in next(data).items()})
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_standard_step_loss_decreases():
+    opt = OptConfig(name="mu2", lr=5e-3, gamma=0.1, beta=0.25)
+    state = init_train_state(TINY, opt, jax.random.PRNGKey(0))
+    losses = _run(make_train_step(TINY, opt), state, lm_batches(TINY, 8, 32), 60)
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.2, losses[::10]
+
+
+def test_robust_step_with_byzantine_group():
+    opt = OptConfig(name="mu2", lr=5e-3, gamma=0.1, beta=0.25)
+    results = {}
+    for agg in ("ctma:cwmed", "mean"):
+        rcfg = RobustDPConfig(n_groups=4, agg=agg, lam=0.3,
+                              byz_groups=(0,), byz_attack="sign_flip")
+        state = init_train_state(TINY, opt, jax.random.PRNGKey(0), rcfg)
+        losses = _run(make_robust_train_step(TINY, opt, rcfg), state,
+                      lm_batches(TINY, 8, 32, seed=1), 60)
+        results[agg] = losses
+    robust_final = np.mean(results["ctma:cwmed"][-10:])
+    mean_final = np.mean(results["mean"][-10:])
+    first = np.mean(results["ctma:cwmed"][:10])
+    assert robust_final < first - 0.15          # robust training progresses
+    assert robust_final <= mean_final + 0.05    # and is no worse than mean
+
+
+def test_robust_heterogeneous_batch_weights():
+    """Remark 3.1: weights ∝ per-group batch sizes."""
+    opt = OptConfig(name="mu2", lr=5e-3, gamma=0.1, beta=0.25)
+    rcfg = RobustDPConfig(n_groups=4, agg="ctma:cwmed", lam=0.25,
+                          weight_mode="batch_size", group_sizes=(1, 2, 3, 2))
+    state = init_train_state(TINY, opt, jax.random.PRNGKey(0), rcfg)
+    losses = _run(make_robust_train_step(TINY, opt, rcfg), state,
+                  lm_batches(TINY, 8, 32, seed=2), 40)
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-8:]) < np.mean(losses[:8])
+
+
+def test_empire_attack_on_groups():
+    opt = OptConfig(name="mu2", lr=5e-3, gamma=0.1, beta=0.25)
+    rcfg = RobustDPConfig(n_groups=4, agg="ctma:cwmed", lam=0.3,
+                          byz_groups=(1,), byz_attack="empire")
+    state = init_train_state(TINY, opt, jax.random.PRNGKey(1), rcfg)
+    losses = _run(make_robust_train_step(TINY, opt, rcfg), state,
+                  lm_batches(TINY, 8, 32, seed=3), 40)
+    assert np.isfinite(losses).all()
+
+
+def test_momentum_and_sgd_steps():
+    for name in ("momentum", "sgd"):
+        opt = OptConfig(name=name, lr=1e-2)
+        state = init_train_state(TINY, opt, jax.random.PRNGKey(0))
+        losses = _run(make_train_step(TINY, opt), state, lm_batches(TINY, 8, 32), 30)
+        assert np.isfinite(losses).all()
+
+
+def test_smoke_config_with_robust_path():
+    cfg = smoke_config("qwen2-moe-a2.7b")
+    opt = OptConfig(name="mu2", lr=3e-3, gamma=0.1, beta=0.25)
+    rcfg = RobustDPConfig(n_groups=2, agg="cwmed", lam=0.2)
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0), rcfg)
+    losses = _run(make_robust_train_step(cfg, opt, rcfg), state,
+                  lm_batches(cfg, 4, 32), 5)
+    assert np.isfinite(losses).all()
