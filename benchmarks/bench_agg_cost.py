@@ -1,12 +1,19 @@
 """Table 1 / Remark 4.1: wall-clock cost of the weighted aggregation rules —
 all are O(dm) (+ log factors), so µs/call should scale ~linearly in d·m.
-Also benchmarks the Pallas kernels (interpret mode) against the jnp oracles."""
+
+Also benchmarks the Pallas kernel paths (interpret mode on CPU; Mosaic on
+TPU) against the jnp oracles, including the fused vs unfused ω-CTMA pipeline
+— the fusion removes one full HBM pass over the (m, d) matrix (3 -> 2), so
+``aggpallas_ctma:cwmed_fused_speedup_*`` rows track the bandwidth win across
+PRs via BENCH_agg.json (written by benchmarks/run.py).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import make_aggregator
+from repro.kernels import ops
 from repro.utils import timeit_median
 
 from .common import fmt_row
@@ -14,20 +21,65 @@ from .common import fmt_row
 GRID = [(9, 10_000), (17, 100_000), (33, 1_000_000)]
 SPECS = ("mean", "cwmed", "gm", "cwtm", "ctma:cwmed", "ctma:gm", "krum", "bucketing:cwmed")
 
+# Pallas-vs-oracle comparison grid: must include (17, 100_000) — the
+# acceptance shape for the fused-CTMA speedup trajectory.
+PALLAS_GRID = [(9, 10_000), (17, 100_000)]
+PALLAS_SPECS = ("cwmed", "gm", "ctma:cwmed")
 
-def run(full: bool = False):
+
+def _data(key, m, d):
+    k1, k2 = jax.random.split(jax.random.fold_in(key, d + m))
+    x = jax.random.normal(k1, (m, d))
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    return x, s
+
+
+def run(full: bool = False, smoke: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
     grid = GRID if full else GRID[:2]
-    for m, d in grid:
-        k1, k2 = jax.random.split(jax.random.fold_in(key, d))
-        x = jax.random.normal(k1, (m, d))
-        s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
-        for spec in SPECS:
+    iters, warmup = (2, 1) if smoke else (5, 2)
+    # Mosaic on TPU, interpreter elsewhere — otherwise the persisted
+    # trajectory would time the interpreter on the hardware fusion targets.
+    interp = jax.default_backend() != "tpu"
+
+    # --- jnp aggregator scaling (Table 1 / Remark 4.1) ---------------------
+    specs = SPECS[:2] if smoke else SPECS
+    for m, d in (grid[:1] if smoke else grid):
+        x, s = _data(key, m, d)
+        for spec in specs:
             agg = jax.jit(make_aggregator(spec, lam=0.25))
-            us = timeit_median(lambda: agg(x, s), iters=5, warmup=2) * 1e6
+            us = timeit_median(lambda: agg(x, s), iters=iters, warmup=warmup) * 1e6
             rows.append(fmt_row(f"aggcost_{spec}_m{m}_d{d}", us,
                                 f"bytes_per_call={m * d * 4}"))
+
+    # --- Pallas kernels vs jnp oracles (both smoke and full keep the full
+    # PALLAS_GRID: it ends at the acceptance shape m=17, d=100k) ------------
+    for m, d in PALLAS_GRID:
+        x, s = _data(key, m, d)
+        for spec in PALLAS_SPECS:
+            oracle = jax.jit(make_aggregator(spec, lam=0.25))
+            kern = ops.make_kernel_aggregator(spec, lam=0.25, interpret=interp)
+            us_o = timeit_median(lambda: oracle(x, s), iters=iters, warmup=warmup) * 1e6
+            us_k = timeit_median(lambda: kern(x, s), iters=iters, warmup=warmup) * 1e6
+            rows.append(fmt_row(f"aggpallas_{spec}_jnp_m{m}_d{d}", us_o,
+                                f"bytes_per_call={m * d * 4}"))
+            rows.append(fmt_row(f"aggpallas_{spec}_kernel_m{m}_d{d}", us_k,
+                                f"vs_jnp_ratio={us_o / max(us_k, 1e-9):.3f}"))
+
+        # fused vs unfused ω-CTMA: the tentpole fusion (2 vs >=3 HBM passes)
+        fused = jax.jit(lambda x, s: ops.wctma(x, s, lam=0.25, fused=True,
+                                               interpret=interp))
+        unfused = jax.jit(lambda x, s: ops.wctma(x, s, lam=0.25, fused=False,
+                                                 interpret=interp))
+        us_f = timeit_median(lambda: fused(x, s), iters=iters, warmup=warmup) * 1e6
+        us_u = timeit_median(lambda: unfused(x, s), iters=iters, warmup=warmup) * 1e6
+        rows.append(fmt_row(f"aggpallas_ctma:cwmed_fused_m{m}_d{d}", us_f,
+                            "hbm_passes=2"))
+        rows.append(fmt_row(f"aggpallas_ctma:cwmed_unfused_m{m}_d{d}", us_u,
+                            "hbm_passes=3"))
+        rows.append(fmt_row(f"aggpallas_ctma:cwmed_fused_speedup_m{m}_d{d}",
+                            us_u - us_f, f"speedup={us_u / max(us_f, 1e-9):.3f}x"))
     return rows
 
 

@@ -1,6 +1,6 @@
 """Benchmark orchestrator — one bench per paper table/figure + system benches.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,fig3,...]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only fig2,...]
 
 Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring the paper's
 experimental panels:
@@ -10,14 +10,23 @@ experimental panels:
     fig4_*      Fig. 4/7  μ²-SGD vs momentum vs SGD
     thm42_*     Thm. 4.2  1/√T excess-loss decay under attack
     aggcost_*   Table 1 / Remark 4.1 aggregator cost scaling
+    aggpallas_* Pallas kernel paths vs jnp oracles (fused vs unfused CTMA)
     kernel_*    Pallas kernel timings (interpret mode)
     roofline_*  §Roofline terms from the dry-run artifacts
+
+Aggregation rows additionally persist to ``BENCH_agg.json`` at the repo root
+so successive PRs accumulate a perf trajectory (``--smoke`` runs the reduced
+aggcost grid only — the CI fast path — and still records the fused-CTMA
+speedup at the acceptance shape m=17, d=100k).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
+from pathlib import Path
 
 BENCHES = {
     "aggcost": "benchmarks.bench_agg_cost",
@@ -29,27 +38,65 @@ BENCHES = {
     "roofline": "benchmarks.bench_roofline",
 }
 
+BENCH_AGG_PATH = Path(__file__).resolve().parents[1] / "BENCH_agg.json"
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def persist_agg(rows: list[str]) -> None:
+    """Append this run's aggregation rows to BENCH_agg.json (perf trajectory)."""
+    agg_rows = [_parse_row(r) for r in rows
+                if r.startswith(("aggcost_", "aggpallas_"))]
+    if not agg_rows:
+        return
+    history = []
+    if BENCH_AGG_PATH.exists():
+        try:
+            history = json.loads(BENCH_AGG_PATH.read_text()).get("runs", [])
+        except (json.JSONDecodeError, AttributeError):
+            history = []
+    history.append({"unix_time": int(time.time()), "rows": agg_rows})
+    BENCH_AGG_PATH.write_text(json.dumps({"runs": history[-20:]}, indent=1))
+    print(f"# wrote {len(agg_rows)} agg rows to {BENCH_AGG_PATH.name}", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: reduced aggcost grid only")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench name(s) {unknown}; choose from {list(BENCHES)}")
+    if args.smoke and not args.only:
+        names = ["aggcost"]
 
     print("name,us_per_call,derived")
     failures = 0
+    all_rows: list[str] = []
     for name in names:
         mod_name = BENCHES[name]
         t0 = time.time()
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            for row in mod.run(full=args.full):
+            if "smoke" in inspect.signature(mod.run).parameters:
+                rows = mod.run(full=args.full, smoke=args.smoke)
+            else:  # benches that predate the smoke flag
+                rows = mod.run(full=args.full)
+            for row in rows:
                 print(row, flush=True)
+            all_rows.extend(rows)
             print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    persist_agg(all_rows)
     if failures:
         raise SystemExit(1)
 

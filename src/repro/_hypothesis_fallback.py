@@ -1,0 +1,126 @@
+"""Minimal, dependency-free stand-in for the subset of `hypothesis` used by
+this repo's property tests (tests/test_aggregators.py, tests/test_kernels.py).
+
+Loaded by tests/conftest.py ONLY when the real `hypothesis` package is not
+installed (this container has no network/pip access — see
+requirements-dev.txt). The real library is strictly preferred: it shrinks
+counterexamples and explores edge cases adaptively; this fallback just draws
+`max_examples` deterministic pseudo-random examples per test, which is enough
+to keep the property suites meaningful offline.
+
+Supported API: @given, @settings(max_examples=, deadline=), strategies.
+{integers, floats, lists, sampled_from, composite}.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+from typing import Any, Callable
+
+import numpy as np
+
+
+class SearchStrategy:
+    """A strategy is just a draw function rng -> value here."""
+
+    def __init__(self, draw_fn: Callable[[np.random.Generator], Any]):
+        self._draw = draw_fn
+
+    def do_draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10
+          ) -> SearchStrategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.do_draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def composite(f: Callable) -> Callable[..., SearchStrategy]:
+    @functools.wraps(f)
+    def builder(*args, **kwargs) -> SearchStrategy:
+        def draw_value(rng):
+            def draw(strategy: SearchStrategy):
+                return strategy.do_draw(rng)
+
+            return f(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_value)
+
+    return builder
+
+
+class settings:
+    """Decorator recording (max_examples, deadline); applied above @given."""
+
+    def __init__(self, max_examples: int = 50, deadline=None, **_kw):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*strategies: SearchStrategy):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None)
+            n = cfg.max_examples if cfg is not None else 50
+            for i in range(n):
+                # stable per-(test, example) seed so failures reproduce
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}:{i}".encode())
+                rng = np.random.default_rng(seed)
+                values = [s.do_draw(rng) for s in strategies]
+                fn(*args, *values, **kwargs)
+
+        wrapper.is_hypothesis_test = True
+        # pytest must not see the strategy-filled parameters as fixtures
+        wrapper.__signature__ = inspect.Signature()
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return decorator
+
+
+# Expose a module-like `strategies` attribute so both import styles work:
+#   from hypothesis import strategies as st
+#   import hypothesis.strategies as st   (conftest registers it in sys.modules)
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.lists = lists
+strategies.sampled_from = sampled_from
+strategies.composite = composite
+strategies.SearchStrategy = SearchStrategy
+
+HealthCheck = types.SimpleNamespace(too_slow="too_slow", data_too_large="data_too_large",
+                                    filter_too_much="filter_too_much")
+
+
+def install() -> None:
+    """Register this module as `hypothesis` in sys.modules (gated by conftest)."""
+    mod = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

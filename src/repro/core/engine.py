@@ -46,6 +46,12 @@ class EngineConfig(NamedTuple):
     byz_start_step: int = 0                 # attacks activate after this iteration
     n_classes: int = 10
     seed: int = 0
+    # Aggregation backend. The server aggregation is O(m·d) over the full
+    # momentum buffer every iteration — far from free at production d.
+    #   auto   — fused Pallas kernels on TPU, jnp oracle elsewhere
+    #   pallas — force the fused kernel path (interpret mode off-TPU)
+    #   jnp    — force the pure-jnp aggregators
+    agg_backend: str = "auto"
 
 
 class EngineState(NamedTuple):
@@ -93,13 +99,27 @@ class AsyncByzantineEngine:
         self.d_dim = d_dim
         self.grad_fn = jax.grad(loss_fn)
         self.value_grad_fn = jax.value_and_grad(loss_fn)
-        self.agg_fn = make_aggregator(cfg.agg, lam=cfg.lam)
+        self.agg_fn = self._make_agg_fn(cfg)
         self.probs = jnp.asarray(arrival_probs(cfg))
         byz_mask = np.zeros((cfg.m,), bool)
         for i in cfg.byz:
             byz_mask[i] = True
         self.byz_mask = jnp.asarray(byz_mask)
         self._step = jax.jit(self._step_impl, donate_argnums=(0,))
+
+    @staticmethod
+    def _make_agg_fn(cfg: EngineConfig):
+        backend = getattr(cfg, "agg_backend", "auto")
+        if backend not in ("auto", "pallas", "jnp"):
+            raise KeyError(f"unknown agg_backend {backend!r}; "
+                           "choose from auto | pallas | jnp")
+        if backend == "auto":
+            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+        if backend == "pallas":
+            from ..kernels.ops import make_kernel_aggregator
+            return make_kernel_aggregator(
+                cfg.agg, lam=cfg.lam, interpret=jax.default_backend() != "tpu")
+        return make_aggregator(cfg.agg, lam=cfg.lam)
 
     # -- initialization ----------------------------------------------------
     def init(self, params_flat: Array, init_batches: Any) -> EngineState:

@@ -1,0 +1,22 @@
+"""Distributed layer: stacked-pytree robust aggregation, mesh-aware train /
+prefill / serve step factories, sharding policies and the active-mesh context.
+
+See README.md in this directory for the API and HBM-pass accounting.
+"""
+from .context import current_mesh, mesh_context  # noqa: F401
+from .robust import (  # noqa: F401
+    make_stacked_aggregator,
+    stacked_ctma,
+    stacked_cwmed,
+    stacked_gm,
+    stacked_mean,
+)
+from .steps import (  # noqa: F401
+    RobustDPConfig,
+    TrainState,
+    init_train_state,
+    make_prefill_step,
+    make_robust_train_step,
+    make_serve_step,
+    make_train_step,
+)

@@ -1,0 +1,32 @@
+"""Active-mesh context.
+
+Model code deep inside a jitted step (e.g. the sharded MoE dispatch) needs to
+know the mesh it is being lowered for, without threading a mesh argument
+through every layer signature. ``mesh_context`` publishes it; ``current_mesh``
+reads it (returning None outside any context, in which case callers fall back
+to mesh-free code paths).
+
+The stack is trace-time state (meshes are static at lowering), so a plain
+module-level list is correct under jit; a re-entrant ``with`` nests properly.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+_MESH_STACK: list = []
+
+
+@contextmanager
+def mesh_context(mesh) -> Iterator[None]:
+    """Publish ``mesh`` as the active mesh for the duration of the block."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield
+    finally:
+        _MESH_STACK.pop()
+
+
+def current_mesh() -> Optional[object]:
+    """The innermost active mesh, or None outside any ``mesh_context``."""
+    return _MESH_STACK[-1] if _MESH_STACK else None

@@ -1,0 +1,124 @@
+"""Sharding policies for the production meshes (launch/mesh.py).
+
+All functions map SHAPE pytrees (ShapeDtypeStructs or arrays) to NamedSharding
+pytrees — they never touch data, so the dry-run can build full sharded
+signatures without allocating a parameter.
+
+Policy:
+- batches    : leading (batch) dim over the data-parallel axes.
+- params     : the trailing-most dim divisible by the ``model`` axis is
+               tensor-parallel; with ``cfg.fsdp`` one remaining dim is
+               additionally sharded over pod×data (ZeRO-3 style). Scanned
+               layer groups (under the ``groups`` key) carry a leading stack
+               dim which is never chosen.
+- KV caches  : batch dim over data-parallel axes (weight-stationary decode
+               keeps params resident and moves activations).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    """Whether ``dim`` divides evenly over the combined mesh axes."""
+    n = _axes_size(mesh, tuple(a for a in axes if a in mesh.axis_names))
+    return n > 1 and dim % n == 0
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _in_groups(path) -> bool:
+    """True for leaves under a ``groups`` key (lax.scan layer/cache stacks,
+    whose axis 0 is the n_full stack dim, not a shardable tensor dim)."""
+    for entry in path:
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if key == "groups":
+            return True
+    return False
+
+
+def _leaf_param_spec(shape: tuple, mesh, *, fsdp: bool, start: int) -> P:
+    """Pick the tensor-parallel (and optionally fsdp) dims for one leaf."""
+    spec: list = [None] * len(shape)
+    model_n = mesh.shape.get("model", 1)
+    for i in range(len(shape) - 1, start - 1, -1):
+        if model_n > 1 and shape[i] % model_n == 0 and shape[i] >= model_n:
+            spec[i] = "model"
+            break
+    if fsdp:
+        dp = dp_axes(mesh)
+        dp_n = _axes_size(mesh, dp)
+        for i in range(len(shape) - 1, start - 1, -1):
+            if spec[i] is None and dp_n > 1 and shape[i] % dp_n == 0 and shape[i] >= dp_n:
+                spec[i] = dp
+                break
+    return P(*spec)
+
+
+def param_sharding(cfg: ModelConfig, mesh, tree: Pytree, mode: str = "train"
+                   ) -> Pytree:
+    """Per-leaf NamedShardings for a parameter(-like) pytree.
+
+    ``mode='decode'`` uses the same weight-stationary layout — params stay
+    resident, sharded over ``model`` along contraction/output dims.
+    """
+    fsdp = bool(cfg.fsdp) and mode == "train"
+
+    def leaf(path, l):
+        shape = tuple(l.shape)
+        start = 1 if _in_groups(path) else 0
+        if len(shape) - start < 2:
+            return replicated(mesh)  # scalars, norm gains, biases
+        return NamedSharding(
+            mesh, _leaf_param_spec(shape, mesh, fsdp=fsdp, start=start))
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)
+
+
+def batch_sharding(cfg: ModelConfig, mesh, tree: Pytree) -> Pytree:
+    """Shard every batch leaf's leading dim over the data-parallel axes."""
+    dp = dp_axes(mesh)
+
+    def leaf(l):
+        shape = tuple(l.shape)
+        if len(shape) >= 1 and _fits(shape[0], mesh, dp):
+            return NamedSharding(mesh, P(dp, *([None] * (len(shape) - 1))))
+        return replicated(mesh)
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def cache_sharding(cfg: ModelConfig, mesh, tree: Pytree) -> Pytree:
+    """KV / recurrent caches: batch axis over dp. Scanned cache stacks (under
+    ``groups``) carry a leading n_full dim, so their batch dim is axis 1."""
+    dp = dp_axes(mesh)
+
+    def leaf(path, l):
+        shape = tuple(l.shape)
+        if len(shape) == 0:
+            return replicated(mesh)            # cache["pos"]
+        b_axis = 1 if (_in_groups(path) and len(shape) >= 2) else 0
+        if _fits(shape[b_axis], mesh, dp):
+            spec = [None] * len(shape)
+            spec[b_axis] = dp
+            return NamedSharding(mesh, P(*spec))
+        return replicated(mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, tree)

@@ -1,0 +1,283 @@
+"""Mesh-aware step factories: standard μ²-SGD training, robust data-parallel
+training (paper Alg. 2's synchronous group form + Remark 3.1 weighting),
+prefill and single-token serve.
+
+Every factory returns a PURE function ``step(...) -> (..., metrics)`` suitable
+for ``jax.jit`` — callers add shardings (launch/specs.py) and donation
+(``donate_argnums=(0,)`` so the train state / KV cache updates in place). The
+robust step keeps per-group corrected momenta as a STACKED pytree — leaves
+carry a leading ``(n_groups, ...)`` axis — and aggregates through
+``dist.robust`` so the CTMA/GM distance pass runs once globally across leaves
+with no O(m·d) flatten copy (see dist/README.md for the HBM accounting).
+
+Byzantine group behaviors follow core.attacks (Appendix D), adapted to the
+group setting: label_flip poisons a group's labels before its gradients;
+sign_flip negates its transmitted momentum; little/empire are omniscient over
+the honest groups' stacked buffers and their weights.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attacks import _little_zmax, flip_labels
+from repro.models.config import ModelConfig
+from repro.models.lm import decode_step, init_lm, lm_loss, prefill
+from repro.optim.mu2sgd import (OptConfig, OptState, _project, init_opt,
+                                opt_query_points, opt_update, server_step)
+from repro.utils import global_norm
+
+Array = jnp.ndarray
+Pytree = Any
+
+_tmap = jax.tree_util.tree_map
+
+
+class RobustDPConfig(NamedTuple):
+    """Robust data-parallel group configuration (server side of Alg. 2)."""
+    n_groups: int = 4
+    agg: str = "ctma:cwmed"          # dist.robust spec: mean|cwmed|gm|ctma:<base>
+    lam: float = 0.25                # λ for the meta-aggregator
+    byz_groups: Tuple[int, ...] = ()
+    byz_attack: str = "none"         # none | sign_flip | label_flip | little | empire
+    weight_mode: str = "counts"      # counts (s_i = update counts) | batch_size
+    group_sizes: Optional[Tuple[int, ...]] = None  # relative per-group batch rows
+    attack_epsilon: float = 0.1      # empire scale
+    attack_z_max: Optional[float] = None  # little deviation; None -> from weights
+
+
+class TrainState(NamedTuple):
+    opt: OptState
+    D: Optional[Pytree] = None       # stacked per-group momentum, leaves (G, ...)
+    counts: Optional[Array] = None   # (G,) per-group update counts s_t
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptConfig, key,
+                     robust: Optional[RobustDPConfig] = None) -> TrainState:
+    params = init_lm(key, cfg)
+    opt = init_opt(opt_cfg, params)
+    if robust is None:
+        return TrainState(opt=opt, D=None, counts=None)
+    G = robust.n_groups
+    D = _tmap(lambda p: jnp.zeros((G,) + p.shape, p.dtype), params)
+    counts = jnp.zeros((G,), jnp.float32)
+    return TrainState(opt=opt, D=D, counts=counts)
+
+
+# ---------------------------------------------------------------------------
+# Standard (single-group) train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig):
+    """step(state, batch) -> (state, {loss, grad_norm}). μ²-SGD evaluates the
+    gradient at BOTH query points on the same batch (the variance-reduced
+    correction); momentum/sgd evaluate once at w."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def step(state: TrainState, batch: dict):
+        opt = state.opt
+        xq, xprev = opt_query_points(opt_cfg, opt)
+        loss, g = jax.value_and_grad(loss_fn)(xq, batch)
+        g_tilde = jax.grad(loss_fn)(xprev, batch) if opt_cfg.name == "mu2" else None
+        new_opt = opt_update(opt_cfg, opt, g, g_tilde)
+        metrics = {"loss": loss, "grad_norm": global_norm(g)}
+        return state._replace(opt=new_opt), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Robust data-parallel train step
+# ---------------------------------------------------------------------------
+
+def _group_sizes(rcfg: RobustDPConfig, B: int) -> list[int]:
+    """Static per-group row counts summing to B (Remark 3.1 heterogeneity)."""
+    G = rcfg.n_groups
+    if rcfg.group_sizes is None:
+        base, extra = divmod(B, G)
+        assert base >= 1, f"batch {B} too small for {G} groups"
+        return [base + (1 if i < extra else 0) for i in range(G)]
+    gs = list(rcfg.group_sizes)
+    assert len(gs) == G
+    total = sum(gs)
+    if total == B:
+        return gs
+    sizes = [max(1, (B * g) // total) for g in gs]
+    sizes[-1] += B - sum(sizes)
+    return sizes
+
+
+def _stack_trees(trees: list) -> Pytree:
+    return _tmap(lambda *ls: jnp.stack(ls), *trees)
+
+
+def _bcast(v: Array, leaf: Array) -> Array:
+    """Reshape a (G,) vector for broadcasting against a (G, ...) leaf."""
+    return v.reshape(v.shape + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+
+
+def _apply_byz_attacks(rcfg: RobustDPConfig, D: Pytree, weights: Array) -> Pytree:
+    """Transform the stacked transmitted momenta according to the attack."""
+    name = rcfg.byz_attack
+    if name in ("none", "label_flip") or not rcfg.byz_groups:
+        return D
+    G = rcfg.n_groups
+    byz = jnp.zeros((G,), bool).at[jnp.asarray(rcfg.byz_groups)].set(True)
+    if name == "sign_flip":
+        sign = jnp.where(byz, -1.0, 1.0)
+        return _tmap(lambda l: (l * _bcast(sign, l)).astype(l.dtype), D)
+
+    # omniscient attacks: weighted mean/std over the HONEST groups
+    hw = weights.astype(jnp.float32) * (~byz).astype(jnp.float32) + 1e-30
+    hw_sum = jnp.sum(hw)
+
+    def leaf_mean(l):
+        return jnp.einsum("g,g...->...", hw, l.astype(jnp.float32)) / hw_sum
+
+    mu = _tmap(leaf_mean, D)
+    if name == "empire":
+        atk = _tmap(lambda m_: -rcfg.attack_epsilon * m_, mu)
+    elif name == "little":
+        def leaf_std(l, m_):
+            var = jnp.einsum("g,g...->...", hw,
+                             jnp.square(l.astype(jnp.float32) - m_)) / hw_sum
+            return jnp.sqrt(jnp.maximum(var, 0.0))
+
+        sd = _tmap(leaf_std, D, mu)
+        z = (jnp.asarray(rcfg.attack_z_max, jnp.float32)
+             if rcfg.attack_z_max is not None
+             else _little_zmax(jnp.sum(weights * (~byz)), jnp.sum(weights * byz)))
+        atk = _tmap(lambda m_, s_: m_ - z * s_, mu, sd)
+    else:
+        raise KeyError(f"unknown attack: {name}")
+
+    def splice(l, a):
+        return jnp.where(_bcast(byz.astype(jnp.float32), l) > 0,
+                         a[None].astype(l.dtype), l)
+
+    return _tmap(splice, D, atk)
+
+
+def make_robust_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                           rcfg: RobustDPConfig):
+    """Synchronous robust-DP step: the global batch is split across
+    ``n_groups`` groups; each computes its corrected momentum on its shard;
+    Byzantine groups corrupt theirs; the server robust-aggregates the stacked
+    buffers weighted per ``weight_mode`` and applies the AnyTime update."""
+    from .robust import make_stacked_aggregator
+
+    agg_fn = make_stacked_aggregator(rcfg.agg, lam=rcfg.lam)
+    G = rcfg.n_groups
+    label_flip_on = (rcfg.byz_attack == "label_flip" and bool(rcfg.byz_groups))
+    byz_list = list(rcfg.byz_groups)
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def per_group(xq, xprev, gbatch, flip):
+        if label_flip_on:
+            lab = gbatch["labels"]
+            lab = jnp.where(flip, flip_labels(lab, cfg.vocab), lab)
+            gbatch = {**gbatch, "labels": lab}
+        loss, g = jax.value_and_grad(loss_fn)(xq, gbatch)
+        g_tilde = (jax.grad(loss_fn)(xprev, gbatch)
+                   if opt_cfg.name == "mu2" else g)
+        return loss, g, g_tilde
+
+    def step(state: TrainState, batch: dict):
+        opt = state.opt
+        B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        sizes = _group_sizes(rcfg, B)
+        flip_flags = jnp.asarray([i in byz_list for i in range(G)])
+        xq, xprev = opt_query_points(opt_cfg, opt)
+
+        if len(set(sizes)) == 1:
+            # uniform groups: ONE traced gradient, vmapped over the group axis
+            gb = _tmap(lambda v: v.reshape((G, sizes[0]) + v.shape[1:]), batch)
+            losses, g, g_tilde = jax.vmap(
+                lambda b, f: per_group(xq, xprev, b, f))(gb, flip_flags)
+        else:
+            outs = []
+            off = 0
+            for i, sz in enumerate(sizes):
+                gbatch = _tmap(lambda v: jax.lax.slice_in_dim(v, off, off + sz), batch)
+                outs.append(per_group(xq, xprev, gbatch, flip_flags[i]))
+                off += sz
+            losses = jnp.stack([o[0] for o in outs])
+            g = _stack_trees([o[1] for o in outs])
+            g_tilde = _stack_trees([o[2] for o in outs])
+
+        counts_new = state.counts + 1.0
+
+        # per-group corrected momentum (μ²) / Polyak momentum / raw gradient
+        if opt_cfg.name == "mu2":
+            beta = (jnp.full((G,), opt_cfg.beta, jnp.float32)
+                    if opt_cfg.beta is not None
+                    else 1.0 / jnp.maximum(counts_new, 1.0))
+            first = counts_new <= 1.0
+
+            def corr(gl, dl, gtl):
+                b = _bcast(beta, gl)
+                upd = gl.astype(jnp.float32) + (1.0 - b) * (
+                    dl.astype(jnp.float32) - gtl.astype(jnp.float32))
+                return jnp.where(_bcast(first.astype(jnp.float32), gl) > 0,
+                                 gl.astype(jnp.float32), upd).astype(dl.dtype)
+
+            D_new = _tmap(corr, g, state.D, g_tilde)
+        elif opt_cfg.name == "momentum":
+            beta = 0.9 if opt_cfg.beta is None else opt_cfg.beta
+            D_new = _tmap(lambda dl, gl: (beta * dl.astype(jnp.float32)
+                                          + (1.0 - beta) * gl.astype(jnp.float32)
+                                          ).astype(dl.dtype), state.D, g)
+        else:  # sgd
+            D_new = _tmap(lambda dl, gl: gl.astype(dl.dtype), state.D, g)
+
+        size_w = jnp.asarray(sizes, jnp.float32)
+        weights = counts_new if rcfg.weight_mode == "counts" else size_w
+
+        D_new = _apply_byz_attacks(rcfg, D_new, weights)
+
+        d_hat = agg_fn(D_new, weights)
+
+        if opt_cfg.name == "mu2":
+            new_opt = server_step(opt_cfg, opt, d_hat)
+        else:
+            w = _tmap(lambda wl, dl: wl - opt_cfg.lr * dl.astype(wl.dtype),
+                      opt.w, d_hat)
+            w = _project(opt_cfg, w, opt.anchor)
+            new_opt = OptState(w=w, x=w, x_prev=None, d=opt.d, t=opt.t + 1,
+                               anchor=opt.anchor)
+
+        loss = jnp.sum(losses * size_w) / jnp.sum(size_w)
+        metrics = {"loss": loss, "grad_norm": global_norm(d_hat)}
+        return TrainState(opt=new_opt, D=D_new, counts=counts_new), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serve path
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """step(params, batch) -> (logits, cache). Full forward over the prompt,
+    emitting the ring-layout decode cache sized for ``max_len``."""
+
+    def step(params, batch: dict):
+        return prefill(params, cfg, batch, max_len)
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """step(params, cache, tokens) -> (logits (B,1,V), cache). Callers donate
+    the cache (``donate_argnums=(1,)``) so the slice update is in-place."""
+
+    def step(params, cache: dict, tokens: Array):
+        return decode_step(params, cfg, cache, tokens)
+
+    return step

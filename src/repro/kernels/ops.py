@@ -4,16 +4,31 @@
 in the Pallas interpreter for correctness validation; on a real TPU deployment
 pass ``interpret=False`` to emit Mosaic kernels. ``use_pallas=False`` falls
 back to the pure-jnp oracle — the path the multi-pod dry-run lowers.
+
+HBM-pass accounting for the (m, d) update matrix X (see wctma_fused.py):
+
+    wcwmed          1 pass
+    wgm             1 (anchor) + 2·iters (fused dist+combine step), ONE traced
+                    loop body via lax.fori_loop — previously the python loop
+                    unrolled 2·iters separate pallas_call launches (and a pad
+                    copy each) into every trace
+    wctma fused     2 passes (anchor+dist fused, then trimmed combine)
+    wctma unfused   ≥3 passes (kept for benchmarking the fusion win)
 """
 from __future__ import annotations
 
-from typing import Optional
+from functools import partial
+from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 
 from . import ref
-from .wcwmed import wcwmed_pallas
-from .wreduce import sqdist_pallas, wcomb_pallas
+from .pad import pad_cols
+from .wcwmed import wcwmed_pallas, wcwmed_padded
+from .wreduce import gm_step_padded, sqdist_pallas, wcomb_padded, wcomb_pallas
+from .wctma_fused import (DEFAULT_BLOCK_D as FUSED_BLOCK_D, trim_weights,
+                          wctma_fused)
 from .swa import swa_decode_pallas
 
 
@@ -27,39 +42,108 @@ def wcwmed(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *,
     return wcwmed_pallas(x, s, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("iters", "eps", "interpret"))
+def _wgm_pallas(x: jnp.ndarray, s: jnp.ndarray, *, iters: int, eps: float,
+                interpret: bool) -> jnp.ndarray:
+    """ω-GM: wcwmed anchor + ``iters`` fused Weiszfeld steps.
+
+    X is padded ONCE (pad.py) and the fused dist+reweight+combine kernel is
+    the body of a ``lax.fori_loop`` — trace size and launch count in the
+    jaxpr are independent of ``iters``.
+    """
+    xp, d, bd = pad_cols(x, FUSED_BLOCK_D)
+    y0 = wcwmed_padded(xp, s, bd, interpret=interpret)     # (dp,), pad cols -> 0
+
+    def body(_, y):
+        return gm_step_padded(xp, s, y, bd, eps=eps, interpret=interpret)
+
+    y = jax.lax.fori_loop(0, iters, body, y0)
+    return y[:d]
+
+
 def wgm(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *, iters: int = 8,
         eps: float = 1e-8, use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
-    """ω-GM via Weiszfeld: kernelized distance pass + reweighted combine."""
+    """ω-GM via Weiszfeld: fused kernelized distance+reweight+combine loop."""
     if s is None:
         s = jnp.ones((x.shape[0],), jnp.float32)
     if not use_pallas:
         return ref.wgm_ref(x, s, iters=iters)
-    y = wcwmed(x, s, use_pallas=True, interpret=interpret)
-    for _ in range(iters):
-        dist = jnp.sqrt(jnp.maximum(sqdist_pallas(x, y, interpret=interpret), 0.0))
-        invd = s.astype(jnp.float32) / jnp.maximum(dist, eps)
-        y = wcomb_pallas(x, invd, jnp.sum(invd), interpret=interpret)
-    return y
+    return _wgm_pallas(x, s, iters=iters, eps=eps, interpret=interpret)
 
 
 def wctma(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *, lam: float,
-          use_pallas: bool = True, interpret: bool = True) -> jnp.ndarray:
-    """ω-CTMA (Alg. 1): anchor (kernel) + distances (kernel) + trimmed combine
-    (kernel); the m-element sort/prefix stays in XLA — it is O(m log m) scalars."""
+          use_pallas: bool = True, interpret: bool = True,
+          fused: bool = True) -> jnp.ndarray:
+    """ω-CTMA (Alg. 1). ``fused=True`` (default) computes anchor + distances
+    in one grid sweep (2 total HBM passes over X); ``fused=False`` keeps the
+    original anchor→sqdist→combine 3-pass pipeline for benchmarking."""
     if s is None:
         s = jnp.ones((x.shape[0],), jnp.float32)
     if not use_pallas:
         return ref.wctma_ref(x, s, lam)
+    if fused:
+        return wctma_fused(x, s, lam=lam, interpret=interpret)
     x0 = wcwmed(x, s, use_pallas=True, interpret=interpret)
     dist = sqdist_pallas(x, x0, interpret=interpret)
-    order = jnp.argsort(dist)
-    sw = s.astype(jnp.float32)[order]
-    cum = jnp.cumsum(sw)
-    thresh = (1.0 - lam) * cum[-1]
-    prev = jnp.concatenate([jnp.zeros_like(cum[:1]), cum[:-1]])
-    kept_sorted = jnp.clip(thresh - prev, 0.0, sw)
-    kept = jnp.zeros_like(kept_sorted).at[order].set(kept_sorted)
-    return wcomb_pallas(x, kept, thresh, interpret=interpret)
+    kept, thresh = trim_weights(dist, s, lam)
+    return wcomb_pallas(x, kept, jnp.maximum(thresh, 1e-30), interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("lam", "iters", "interpret"))
+def _wctma_gm_pallas(x: jnp.ndarray, s: jnp.ndarray, *, lam: float,
+                     iters: int = 32, interpret: bool) -> jnp.ndarray:
+    """ω-CTMA with a GM anchor: shares one padded copy of X across the GM
+    loop, the anchor-distance pass and the trimmed combine."""
+    xp, d, bd = pad_cols(x, FUSED_BLOCK_D)
+    y = wcwmed_padded(xp, s, bd, interpret=interpret)
+
+    def body(_, yy):
+        return gm_step_padded(xp, s, yy, bd, interpret=interpret)
+
+    y = jax.lax.fori_loop(0, iters, body, y)
+    from .wreduce import sqdist_padded
+    dist = sqdist_padded(xp, y, bd, interpret=interpret)
+    kept, thresh = trim_weights(dist, s, lam)
+    return wcomb_padded(xp, kept, jnp.maximum(thresh, 1e-30), bd,
+                        interpret=interpret)[:d]
+
+
+def make_kernel_aggregator(spec: str, lam: float = 0.0, *,
+                           interpret: bool = True
+                           ) -> Callable[[jnp.ndarray, Optional[jnp.ndarray]], jnp.ndarray]:
+    """Kernel-backed analogue of ``core.aggregators.make_aggregator``.
+
+    Routes ``mean | cwmed | gm | ctma:cwmed | ctma:gm`` through the fused
+    Pallas paths; any other spec falls back to the jnp aggregator (those rules
+    are either O(m²d) pairwise or sort-heavy and are benchmark baselines, not
+    hot paths). The returned callable has signature ``agg(X, s=None) -> (d,)``.
+    """
+    spec = spec.lower()
+
+    def _mean(x, s=None):
+        if s is None:
+            s = jnp.ones((x.shape[0],), jnp.float32)
+        xp, d, bd = pad_cols(x, FUSED_BLOCK_D)
+        return wcomb_padded(xp, s, jnp.sum(s.astype(jnp.float32)), bd,
+                            interpret=interpret)[:d]
+
+    if spec == "mean":
+        return jax.jit(_mean)
+    if spec == "cwmed":
+        return partial(wcwmed, interpret=interpret)
+    if spec == "gm":
+        # iters matches the jnp registry default (core.aggregators.weighted_gm)
+        return partial(wgm, iters=32, interpret=interpret)
+    if spec.startswith("ctma"):
+        base = spec.split(":", 1)[1] if ":" in spec else "cwmed"
+        if base == "cwmed":
+            return partial(wctma, lam=lam, interpret=interpret)
+        if base == "gm":
+            return lambda x, s=None: _wctma_gm_pallas(
+                x, jnp.ones((x.shape[0],), jnp.float32) if s is None else s,
+                lam=lam, interpret=interpret)
+    from repro.core.aggregators import make_aggregator
+    return make_aggregator(spec, lam=lam)
 
 
 def swa_decode(q, k_cache, v_cache, pos, *, local: bool,
@@ -84,7 +168,6 @@ def ssd_scan(x, dt, A, Bm, Cm, chunk: int, *, use_pallas: bool = True,
     nc = s // chunk
     n = Bm.shape[-1]
 
-    import jax
     s0 = jnp.zeros((b, h, p, n), jnp.float32)
 
     def step(carry, inp):

@@ -13,7 +13,9 @@ with the paper's exact-tie rule (a prefix hitting S/2 exactly averages the
 two adjacent elements) handled by two extra masked sums.
 
 Layout: grid over d-tiles; each program holds an (m, bd) tile of X plus the
-(m,) weights in VMEM and unrolls the m accumulation steps.
+(m,) weights in VMEM and unrolls the m accumulation steps. The tile-local
+selection body lives in ``wmed_tile`` so the fused ω-CTMA kernel
+(``wctma_fused.py``) can piggyback its distance pass on the same VMEM tile.
 """
 from __future__ import annotations
 
@@ -23,12 +25,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .pad import pad_cols
+
 DEFAULT_BLOCK_D = 512
 
 
-def _kernel(x_ref, s_ref, o_ref, *, m: int):
-    x = x_ref[...].astype(jnp.float32)          # (m, bd)
-    s = s_ref[...].astype(jnp.float32)          # (m, 1)
+def wmed_tile(x: jnp.ndarray, s: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Weighted median of each column of an (m, bd) VMEM tile. s: (m, 1)."""
     total = jnp.sum(s)
     half = 0.5 * total
 
@@ -51,19 +54,20 @@ def _kernel(x_ref, s_ref, o_ref, *, m: int):
     v_tie = jnp.sum(jnp.where(tie_at, x, 0.0), axis=0)
     nxt = (below == half)
     v_next = jnp.sum(jnp.where(nxt, x, 0.0), axis=0)
-    o_ref[...] = jnp.where(has_tie, 0.5 * (v_tie + v_next), med)
+    return jnp.where(has_tie, 0.5 * (v_tie + v_next), med)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def wcwmed_pallas(x: jnp.ndarray, s: jnp.ndarray, *, block_d: int = DEFAULT_BLOCK_D,
+def _kernel(x_ref, s_ref, o_ref, *, m: int):
+    x = x_ref[...].astype(jnp.float32)          # (m, bd)
+    s = s_ref[...].astype(jnp.float32)          # (m, 1)
+    o_ref[...] = wmed_tile(x, s, m)
+
+
+def wcwmed_padded(xp: jnp.ndarray, s: jnp.ndarray, bd: int, *,
                   interpret: bool = True) -> jnp.ndarray:
-    """x: (m, d), s: (m,) -> (d,) float32."""
-    m, d = x.shape
-    bd = min(block_d, d)
-    pad = (-d) % bd
-    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
-    dp = d + pad
-    out = pl.pallas_call(
+    """Median over a pre-padded float32 (m, dp) matrix -> (dp,). See pad.py."""
+    m, dp = xp.shape
+    return pl.pallas_call(
         functools.partial(_kernel, m=m),
         grid=(dp // bd,),
         in_specs=[
@@ -74,4 +78,11 @@ def wcwmed_pallas(x: jnp.ndarray, s: jnp.ndarray, *, block_d: int = DEFAULT_BLOC
         out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
         interpret=interpret,
     )(xp, s.astype(jnp.float32)[:, None])
-    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def wcwmed_pallas(x: jnp.ndarray, s: jnp.ndarray, *, block_d: int = DEFAULT_BLOCK_D,
+                  interpret: bool = True) -> jnp.ndarray:
+    """x: (m, d), s: (m,) -> (d,) float32."""
+    xp, d, bd = pad_cols(x, block_d)
+    return wcwmed_padded(xp, s, bd, interpret=interpret)[:d]

@@ -37,7 +37,8 @@ def main(argv=None) -> dict:
     max_len = args.prompt_len + args.gen
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
     prefill_step = jax.jit(make_prefill_step(cfg, max_len))
-    serve_step = jax.jit(make_serve_step(cfg))
+    # donate the KV cache so the per-token slice update is in-place
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
     rng = np.random.default_rng(args.seed)
     B = args.requests

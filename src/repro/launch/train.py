@@ -57,7 +57,8 @@ def main(argv=None) -> dict:
         step_fn = make_robust_train_step(cfg, opt_cfg, robust_cfg)
     else:
         step_fn = make_train_step(cfg, opt_cfg)
-    step_fn = jax.jit(step_fn)
+    # donate the train state: w/x/D buffers update in place every step
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
 
     state = init_train_state(cfg, opt_cfg, jax.random.PRNGKey(args.seed), robust_cfg)
     data = lm_batches(cfg, args.batch, args.seq, seed=args.seed)

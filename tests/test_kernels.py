@@ -7,6 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+from repro.kernels.wctma_fused import wctma_fused
 from repro.kernels.wreduce import sqdist_pallas, wcomb_pallas
 
 KEY = jax.random.PRNGKey(0)
@@ -65,6 +66,80 @@ def test_wctma_kernel_matches_oracle(m, d, lam):
     np.testing.assert_allclose(np.asarray(ops.wctma(x, s, lam=lam)),
                                np.asarray(ref.wctma_ref(x, s, lam)),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused ω-CTMA (single-pass anchor + distances, then one trimmed combine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d", SHAPES_MD)
+@pytest.mark.parametrize("dtype", DTYPES, ids=str)
+@pytest.mark.parametrize("lam", [0.1, 0.3])
+def test_wctma_fused_sweep(m, d, dtype, lam):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 11 * m + d))
+    x = jax.random.normal(k1, (m, d)).astype(dtype)
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    np.testing.assert_allclose(np.asarray(wctma_fused(x, s, lam=lam)),
+                               np.asarray(ref.wctma_ref(x, s, lam)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD[:4])
+def test_wctma_fused_exact_tie_anchor(m, d):
+    """Even m + unit weights hits the exact S/2 prefix tie in the fused
+    anchor pass (paper's average-the-adjacent-pair rule)."""
+    me = m + (m % 2)  # force even worker count
+    x = jax.random.normal(jax.random.fold_in(KEY, 13 * d), (me, d))
+    s = jnp.ones((me,))
+    np.testing.assert_allclose(np.asarray(wctma_fused(x, s, lam=0.25)),
+                               np.asarray(ref.wctma_ref(x, s, 0.25)),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_wctma_fused_boundary_row_clipping():
+    """(1-λ)·Σs falls strictly inside a row's weight interval: the boundary
+    row must be kept with exactly the clipped partial mass."""
+    x = jnp.stack([jnp.zeros(64), jnp.ones(64), 2.0 * jnp.ones(64),
+                   100.0 * jnp.ones(64)])
+    s = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    lam = 0.3  # thresh = 2.8 -> kept (sorted by dist) = [1, 1, 0.8, 0]
+    got = wctma_fused(x, s, lam=lam)
+    want = ref.wctma_ref(x, s, lam)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # the far outlier must be fully trimmed, not merely down-weighted
+    assert float(jnp.max(got)) < 2.0
+
+
+def test_wctma_fused_matches_unfused():
+    x = jax.random.normal(jax.random.fold_in(KEY, 77), (9, 777))
+    s = jax.random.uniform(jax.random.fold_in(KEY, 78), (9,), minval=0.1, maxval=3.0)
+    np.testing.assert_allclose(
+        np.asarray(ops.wctma(x, s, lam=0.2, fused=True)),
+        np.asarray(ops.wctma(x, s, lam=0.2, fused=False)), atol=1e-5, rtol=1e-5)
+
+
+def test_wgm_trace_size_independent_of_iters():
+    """The fori_loop rewrite must trace the fused Weiszfeld step ONCE: launch
+    count and trace size may not grow with iters (previously 1 + 2·iters
+    pallas_call launches were unrolled into every trace)."""
+    x = jax.random.normal(KEY, (9, 512))
+    s = jnp.ones((9,))
+    j2 = jax.make_jaxpr(lambda x, s: ops.wgm(x, s, iters=2))(x, s)
+    j16 = jax.make_jaxpr(lambda x, s: ops.wgm(x, s, iters=16))(x, s)
+    n2, n16 = str(j2).count("pallas_call"), str(j16).count("pallas_call")
+    assert n2 == n16 == 2, (n2, n16)  # anchor pass + ONE fused loop body
+    assert len(j2.eqns) == len(j16.eqns)
+
+
+def test_kernel_aggregator_registry_matches_jnp():
+    from repro.core.aggregators import make_aggregator
+    x = jax.random.normal(jax.random.fold_in(KEY, 5), (8, 300))
+    s = jax.random.uniform(jax.random.fold_in(KEY, 6), (8,), minval=0.2, maxval=2.0)
+    for spec in ("mean", "cwmed", "gm", "ctma:cwmed", "ctma:gm"):
+        got = ops.make_kernel_aggregator(spec, lam=0.25)(x, s)
+        want = make_aggregator(spec, lam=0.25)(x, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4, err_msg=spec)
 
 
 SWA_CASES = [
