@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import make_aggregator
+from repro.agg import resolve
 from repro.kernels import ops
 from repro.utils import timeit_median
 
@@ -48,7 +48,7 @@ def run(full: bool = False, smoke: bool = False):
     for m, d in (grid[:1] if smoke else grid):
         x, s = _data(key, m, d)
         for spec in specs:
-            agg = jax.jit(make_aggregator(spec, lam=0.25))
+            agg = jax.jit(resolve(spec, lam=0.25, backend="jnp"))
             us = timeit_median(lambda: agg(x, s), iters=iters, warmup=warmup) * 1e6
             rows.append(fmt_row(f"aggcost_{spec}_m{m}_d{d}", us,
                                 f"bytes_per_call={m * d * 4}"))
@@ -58,8 +58,8 @@ def run(full: bool = False, smoke: bool = False):
     for m, d in PALLAS_GRID:
         x, s = _data(key, m, d)
         for spec in PALLAS_SPECS:
-            oracle = jax.jit(make_aggregator(spec, lam=0.25))
-            kern = ops.make_kernel_aggregator(spec, lam=0.25, interpret=interp)
+            oracle = jax.jit(resolve(spec, lam=0.25, backend="jnp"))
+            kern = resolve(spec, lam=0.25, backend="pallas", interpret=interp)
             us_o = timeit_median(lambda: oracle(x, s), iters=iters, warmup=warmup) * 1e6
             us_k = timeit_median(lambda: kern(x, s), iters=iters, warmup=warmup) * 1e6
             rows.append(fmt_row(f"aggpallas_{spec}_jnp_m{m}_d{d}", us_o,

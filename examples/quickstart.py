@@ -1,20 +1,21 @@
-"""Quickstart: weighted robust aggregation + a 60-second asynchronous
-Byzantine training run on the paper's classifier.
+"""Quickstart: the unified aggregator API (`repro.agg`) + a 60-second
+asynchronous Byzantine training run on the paper's classifier.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (AsyncByzantineEngine, AttackConfig, EngineConfig,
-                        expected_lambda, weighted_ctma, weighted_cwmed, weighted_gm)
+from repro import agg
+from repro.core import AsyncByzantineEngine, AttackConfig, EngineConfig, expected_lambda
 from repro.configs.paper_cnn import MLP_SMALL
 from repro.data import classification_batches, make_classification_data, worker_batches
 from repro.models.classifier import classifier_accuracy, classifier_loss, init_classifier
 from repro.optim import OptConfig
 from repro.utils import ravel_pytree_fn
 
-# --- 1. weighted robust aggregators on raw vectors --------------------------
+# --- 1. one spec string, one resolve path, any layout -----------------------
+# Spec grammar: rule[:base][@backend], e.g. "cwmed", "ctma:gm@pallas", "zeno".
 key = jax.random.PRNGKey(0)
 m, d = 9, 1000
 honest = jax.random.normal(key, (m, d)) * 0.1 + 1.0
@@ -23,10 +24,17 @@ weights = jnp.arange(1.0, m + 1)                  # update counts s_i
 
 print("weighted mean  (poisoned):", float(jnp.mean(byzantine @ jnp.ones(d))) / d)
 # byz weight mass = (8+9)/45 ≈ 0.38, so the meta-aggregator needs λ ≥ 0.38
-for name, agg in [("ω-CWMed", weighted_cwmed(byzantine, weights)),
-                  ("ω-GM", weighted_gm(byzantine, weights)),
-                  ("ω-CTMA", weighted_ctma(byzantine, weights, lam=0.4))]:
-    print(f"{name:8s} -> mean coordinate {float(jnp.mean(agg)):+.3f} (honest ≈ +1.0)")
+for spec in ("cwmed", "gm", "ctma:cwmed", "zeno"):
+    rule = agg.resolve(spec, lam=0.4)             # layout-polymorphic callable
+    out = rule(byzantine, weights)                # flat (m, d) matrix path
+    print(f"{spec:12s} -> mean coordinate {float(jnp.mean(out)):+.3f} (honest ≈ +1.0)")
+
+# the SAME resolved callable aggregates a stacked pytree (leaves (m, ...)),
+# leaf-wise with one global distance pass — the dist.steps production layout
+tree = {"w": byzantine[:, :900].reshape(m, 30, 30), "b": byzantine[:, 900:]}
+out = agg.resolve("ctma:cwmed", lam=0.4)(tree, weights)
+print(f"{'ctma (tree)':12s} -> mean coordinate "
+      f"{float(jnp.mean(out['w'])):+.3f} (same rule, pytree layout)")
 
 # --- 2. asynchronous Byzantine training (Algorithm 2) ------------------------
 mcfg = MLP_SMALL

@@ -18,26 +18,29 @@ from repro.configs import smoke_config
 from repro.core import AsyncByzantineEngine, AttackConfig, EngineConfig, expected_lambda
 from repro.data import lm_batches
 from repro.models import init_lm, lm_loss
+from repro.utils import logger
 from repro.optim import OptConfig
-from repro.utils import ravel_pytree_fn, logger
 
 
 def run(agg: str, lam: float, steps: int, seed: int = 0) -> list:
     cfg = smoke_config("qwen2-1.5b").with_(n_layers=2, d_model=128, d_ff=256,
                                            vocab=256)
+    # PYTREE-NATIVE engine: the parameter tree goes in as-is — no O(d) ravel /
+    # unravel round-trip per gradient; the stacked momentum buffers aggregate
+    # leaf-wise through repro.agg with one global distance pass.
     params = init_lm(jax.random.PRNGKey(seed), cfg)
-    flat, unravel = ravel_pytree_fn(params)
-    logger.info("model: %s (%.2fM params), agg=%s", cfg.name, flat.size / 1e6, agg)
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    logger.info("model: %s (%.2fM params), agg=%s", cfg.name, n_params / 1e6, agg)
 
-    def loss_fn(w, batch):
-        return lm_loss(unravel(w), cfg, batch)
+    def loss_fn(p, batch):
+        return lm_loss(p, cfg, batch)
 
     ecfg = EngineConfig(m=9, byz=(7, 8), attack=AttackConfig("sign_flip"),
                         agg=agg, lam=lam, arrival="proportional",
                         opt=OptConfig(name="mu2", lr=0.02, gamma=0.1, beta=0.25),
                         seed=seed)
     logger.info("expected Byzantine update fraction λ=%.2f", expected_lambda(ecfg))
-    eng = AsyncByzantineEngine(ecfg, loss_fn, flat.shape[0])
+    eng = AsyncByzantineEngine(ecfg, loss_fn)
 
     data = lm_batches(cfg, 4, 64, seed=seed)
 
@@ -48,7 +51,7 @@ def run(agg: str, lam: float, steps: int, seed: int = 0) -> list:
     init_stack = [next(data) for _ in range(m)]
     init_batches = {k: jnp.stack([jnp.asarray(b[k]) for b in init_stack])
                     for k in init_stack[0]}
-    state = eng.init(flat, init_batches)
+    state = eng.init(params, init_batches)
 
     losses = []
     for k in range(steps):

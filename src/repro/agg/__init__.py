@@ -1,0 +1,24 @@
+"""`repro.agg` — the unified, layout-polymorphic aggregator API.
+
+    from repro import agg
+
+    ctma = agg.resolve("ctma:gm@pallas", lam=0.25)
+    d_hat = ctma(X, s)        # X: (m, d) matrix  -> fused Pallas kernels
+    d_hat = ctma(tree, s)     # stacked pytree    -> leaf-wise global-pass path
+
+Spec grammar (``spec.py``): ``rule[:base][@backend]``. One registry
+(``registry.py``) backs `core.engine`, `dist.steps`, the launchers, the
+benchmarks and the examples; the legacy factories
+(`core.aggregators.make_aggregator`, `kernels.ops.make_kernel_aggregator`,
+`dist.robust.make_stacked_aggregator`) are deprecated shims over
+:func:`resolve`.
+"""
+from .spec import AggregatorSpec, BACKENDS, parse  # noqa: F401
+from .registry import (  # noqa: F401
+    AGGREGATOR_SPECS,
+    Rule,
+    register,
+    resolve,
+    rules,
+)
+from .baselines import stacked_zeno, weighted_zeno  # noqa: F401

@@ -1,0 +1,73 @@
+"""Baseline rules from related work, as first-class registry specs.
+
+``zeno`` — Zeno++-style descent scoring (Xie et al.), adapted to the paper's
+weighted setting. Zeno++ scores a candidate update g against an oracle
+gradient v by the estimated descent γ⟨v, g⟩ − ρ‖g‖² and suspends updates that
+score low. No trusted validation gradient exists at the server here, so the
+oracle proxy is the ROBUST anchor — the weighted coordinate-wise median of
+the received updates (the same anchoring trick as ω-CTMA; the plain weighted
+mean would be poisoned by the very rows being scored). Rows keep the top
+(1 − λ) *weight mass* by score with CTMA's boundary-clipping trim, so the
+kept mass is exactly (1 − λ)·Σs. ``bucketing`` (Karimireddy et al.) lives in
+``core.aggregators``; both compose through the one registry.
+
+Both layouts are covered: the flat ``(m, d)`` scorer below, and a stacked
+variant whose inner-product/norm pass is computed ONCE GLOBALLY across the
+pytree leaves — the same single-pass discipline as ``dist.robust``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Pytree = Any
+
+_tmap = jax.tree_util.tree_map
+
+
+def _zeno_combine_weights(score: Array, s: Array, lam: float):
+    """Keep the top (1-λ) weight mass by score (largest first)."""
+    from repro.kernels.wctma_fused import trim_weights  # pure jnp
+
+    # trim_weights keeps the SMALLEST 'distances'; negate to keep top scores
+    return trim_weights(-score, s, lam)
+
+
+def weighted_zeno(x: Array, s: Optional[Array] = None, *, lam: float = 0.25,
+                  rho: float = 1e-3, eps: float = 1e-8) -> Array:
+    """Zeno++-style scoring on an (m, d) matrix with weights s."""
+    from repro.core.aggregators import weighted_cwmed
+
+    m = x.shape[0]
+    s = jnp.ones((m,), jnp.float32) if s is None else s.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    v = weighted_cwmed(xf, s)                               # robust oracle proxy
+    vnorm = jnp.sqrt(jnp.maximum(jnp.sum(jnp.square(v)), eps))
+    score = (xf @ v) / vnorm - rho * jnp.sum(jnp.square(xf), axis=1)
+    kept, thresh = _zeno_combine_weights(score, s, lam)
+    return jnp.einsum("m,md->d", kept, xf) / jnp.maximum(thresh, 1e-30)
+
+
+def stacked_zeno(tree: Pytree, s: Optional[Array] = None, *, lam: float = 0.25,
+                 rho: float = 1e-3, eps: float = 1e-8) -> Pytree:
+    """Zeno++-style scoring on a stacked pytree: the per-row ⟨v, x_i⟩ and
+    ‖x_i‖² reductions are accumulated across ALL leaves in one pass."""
+    from repro.dist.robust import _combine, _flat2, _lead, _weights, stacked_cwmed
+
+    s = _weights(s, _lead(tree))
+    v = stacked_cwmed(tree, s)                              # robust oracle proxy
+
+    def part(xl, vl):
+        xf = _flat2(xl).astype(jnp.float32)
+        vf = vl.reshape(-1).astype(jnp.float32)
+        return jnp.stack([xf @ vf, jnp.sum(jnp.square(xf), axis=1)])
+
+    inner, norm2 = sum(jax.tree_util.tree_leaves(_tmap(part, tree, v)))
+    vsq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(v))
+    score = inner / jnp.sqrt(jnp.maximum(vsq, eps)) - rho * norm2
+    kept, thresh = _zeno_combine_weights(score, s, lam)
+    return _combine(tree, kept, jnp.maximum(thresh, 1e-30))

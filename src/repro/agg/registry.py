@@ -1,0 +1,312 @@
+"""One registry, one resolve path for every robust-aggregation rule.
+
+``resolve(spec, **kw)`` returns a LAYOUT-POLYMORPHIC callable
+
+    agg(X, s=None)      X: (m, d) matrix  -> (d,) vector
+    agg(tree, s=None)   tree: stacked pytree, leaves (m, ...) -> pytree
+
+dispatching per input layout:
+
+    flat (m, d) matrix   backend ``jnp``    -> core.aggregators oracles
+                         backend ``pallas`` -> kernels.ops fused pipelines
+                         backend ``auto``   -> pallas on TPU, jnp elsewhere
+    stacked pytree       always the leaf-wise ``dist.robust`` path with its
+                         single GLOBAL distance pass (no O(m·d) flatten copy)
+
+A rule without a native implementation for some path degrades gracefully:
+missing pallas -> the jnp oracle; missing stacked -> a flatten/unflatten
+fallback around the flat path (correct, but pays the copy the native stacked
+rules avoid — fine for benchmark baselines, wrong for hot paths).
+
+Registering a new rule (e.g. a baseline from related work) is one call:
+
+    register("myrule", flat=lambda sp: my_flat_fn, stacked=..., pallas=...)
+
+Each builder receives the parsed :class:`AggregatorSpec` (λ, iters, extra
+params) and returns ``fn(x, s=None)`` for its layout.
+"""
+from __future__ import annotations
+
+import inspect
+import math
+from functools import partial
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators as _flatagg
+
+from .baselines import stacked_zeno, weighted_zeno
+from .spec import AggregatorSpec, SpecLike, parse
+
+
+def _ops():
+    """Pallas kernel wrappers, imported ONLY when a pallas builder runs — the
+    pure-jnp paths (core.engine with backend='jnp') never pay the kernel
+    package import."""
+    from repro.kernels import ops
+    return ops
+
+
+def _stk():
+    """Stacked-pytree backends, imported ONLY when a stacked builder runs
+    (first pytree input) — flat-matrix users never pull in repro.dist."""
+    from repro.dist import robust
+    return robust
+
+
+Builder = Callable[[AggregatorSpec], Callable]
+
+
+class Rule(NamedTuple):
+    flat: Builder                      # jnp oracle — always present
+    pallas: Optional[Builder] = None   # fused kernel path (None -> flat)
+    stacked: Optional[Builder] = None  # leaf-wise path (None -> flatten fallback)
+    composes: bool = False             # accepts a ':base' inner rule
+    doc: str = ""
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register(name: str, flat: Builder, *, pallas: Optional[Builder] = None,
+             stacked: Optional[Builder] = None, composes: bool = False,
+             doc: str = "") -> None:
+    """Add (or override) a rule in the global registry."""
+    _RULES[name.lower()] = Rule(flat, pallas, stacked, composes, doc)
+
+
+def rules() -> Dict[str, Rule]:
+    return dict(_RULES)
+
+
+def resolve(spec: SpecLike, **kw) -> Callable:
+    """Parse ``spec`` and build its layout-polymorphic aggregator.
+
+    ``resolve("ctma:gm@pallas", lam=0.25)(X_or_tree, s)`` — see module doc.
+    The parsed spec is attached to the callable as ``.spec``.
+    """
+    sp = parse(spec, **kw)
+    if sp.rule not in _RULES:
+        raise KeyError(f"unknown aggregator rule {sp.rule!r} in spec "
+                       f"{sp.canonical!r}; registered: {sorted(_RULES)}")
+    rule = _RULES[sp.rule]
+    if sp.base is not None:
+        if not rule.composes:
+            raise ValueError(f"rule {sp.rule!r} does not compose with a base "
+                             f"(got {sp.canonical!r})")
+        if sp.base not in _RULES:
+            raise KeyError(f"unknown base rule {sp.base!r} in {sp.canonical!r}")
+
+    backend = sp.backend
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "pallas" and rule.pallas is not None:
+        flat_fn = rule.pallas(sp)
+    else:
+        flat_fn = rule.flat(sp)
+
+    # The stacked branch builds lazily on the first pytree input: flat-only
+    # users never import the dist layer, and a stacked builder that declines
+    # (returns None — e.g. ctma over a base with no leaf-wise path) falls
+    # back to the flatten adapter instead of handing out a broken callable.
+    cache: dict = {}
+
+    def _stacked_fn():
+        if "fn" not in cache:
+            fn = rule.stacked(sp) if rule.stacked is not None else None
+            cache["fn"] = fn if fn is not None else _flatten_fallback(flat_fn)
+        return cache["fn"]
+
+    def agg(x, s=None):
+        if _is_flat_matrix(x):
+            return flat_fn(x, s)
+        return _stacked_fn()(x, s)
+
+    agg.spec = sp
+    agg.__name__ = f"agg<{sp.canonical}>"
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Layout dispatch + generic stacked fallback
+# ---------------------------------------------------------------------------
+
+def _is_flat_matrix(x) -> bool:
+    """A single (m, d) array takes the flat path; anything else (dicts,
+    tuples, or single arrays of other ranks) is a stacked tree. The 2-D
+    single-array case is semantically unambiguous: leaf-wise aggregation of
+    one (m, d) leaf equals flat aggregation of the matrix."""
+    return hasattr(x, "ndim") and x.ndim == 2
+
+
+def _flatten_fallback(flat_fn: Callable) -> Callable:
+    """Stacked adapter for rules with no native leaf-wise path: concatenate
+    the (m, ...) leaves into one (m, d) matrix, run the flat rule, unflatten.
+    Costs the O(m·d) copy the native stacked rules avoid."""
+    def agg(tree, s=None):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        m = leaves[0].shape[0]
+        x = jnp.concatenate(
+            [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+        out = flat_fn(x, s)
+        pieces, off = [], 0
+        for l in leaves:
+            n = math.prod(l.shape[1:])
+            pieces.append(out[off:off + n].reshape(l.shape[1:]))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, pieces)
+
+    return agg
+
+
+# ---------------------------------------------------------------------------
+# Built-in rules
+# ---------------------------------------------------------------------------
+
+def _interp(sp: AggregatorSpec) -> bool:
+    """Pallas interpret mode: explicit override, else Mosaic only on TPU."""
+    if sp.interpret is not None:
+        return sp.interpret
+    return jax.default_backend() != "tpu"
+
+
+def _split_kwargs(kw: dict, fn: Callable) -> tuple[dict, dict]:
+    """Partition spec extras into (accepted by ``fn``, rest). Composed specs
+    carry parameters for BOTH the meta-rule and its base (``ctma:krum`` with
+    ``n_byz``): the meta-rule keeps what its signature names, the base builder
+    receives the remainder."""
+    try:
+        params = inspect.signature(fn).parameters.values()
+        names = {p.name for p in params
+                 if p.kind in (p.KEYWORD_ONLY, p.POSITIONAL_OR_KEYWORD)}
+    except (TypeError, ValueError):  # pragma: no cover
+        return kw, {}
+    return ({k: v for k, v in kw.items() if k in names},
+            {k: v for k, v in kw.items() if k not in names})
+
+
+def _flat_base(sp: AggregatorSpec, default: str, extras: dict) -> Callable:
+    name = sp.base or default
+    return _RULES[name].flat(sp._replace(rule=name, base=None,
+                                         params=tuple(sorted(extras.items()))))
+
+
+def _stacked_base(sp: AggregatorSpec, default: str,
+                  extras: dict) -> Optional[Callable]:
+    name = sp.base or default
+    entry = _RULES[name]
+    if entry.stacked is None:
+        return None
+    return entry.stacked(sp._replace(rule=name, base=None,
+                                     params=tuple(sorted(extras.items()))))
+
+
+def _cwtm_lam(sp: AggregatorSpec) -> float:
+    return max(sp.lam, 1e-3)  # λ=0 would retain everything: degenerate band
+
+
+def _pallas_ctma(sp: AggregatorSpec) -> Callable:
+    interp = _interp(sp)
+    base = sp.base or "cwmed"
+    if not sp.kwargs:  # base extras force the composable jnp path
+        if base == "cwmed":
+            return partial(_ops().wctma, lam=sp.lam, interpret=interp)
+        if base == "gm":
+            return partial(_ops().wctma_gm, lam=sp.lam, iters=sp.iters,
+                           interpret=interp)
+    return _flat_ctma(sp)  # other anchors: no fused pipeline, jnp oracle
+
+
+def _flat_ctma(sp: AggregatorSpec) -> Callable:
+    mine, rest = _split_kwargs(sp.kwargs, _flatagg.weighted_ctma)
+    for reserved in ("x", "s", "lam", "base"):
+        mine.pop(reserved, None)
+    return partial(_flatagg.weighted_ctma, lam=sp.lam,
+                   base=_flat_base(sp, "cwmed", rest), **mine)
+
+
+def _stacked_ctma(sp: AggregatorSpec) -> Optional[Callable]:
+    stk = _stk()
+    mine, rest = _split_kwargs(sp.kwargs, stk.stacked_ctma)
+    for reserved in ("tree", "s", "lam", "base"):
+        mine.pop(reserved, None)
+    base = _stacked_base(sp, "cwmed", rest)
+    if base is None:
+        return None
+    return partial(stk.stacked_ctma, lam=sp.lam, base=base, **mine)
+
+
+def _flat_bucketing(sp: AggregatorSpec) -> Callable:
+    mine, rest = _split_kwargs(sp.kwargs, _flatagg.bucketing)
+    for reserved in ("x", "s", "inner"):  # composition comes from the spec
+        mine.pop(reserved, None)
+    return partial(_flatagg.bucketing,
+                   inner=_flat_base(sp, "cwmed", rest), **mine)
+
+
+def _register_builtins() -> None:
+    register(
+        "mean",
+        flat=lambda sp: _flatagg.weighted_mean,
+        pallas=lambda sp: partial(_ops().wmean, interpret=_interp(sp)),
+        stacked=lambda sp: _stk().stacked_mean,
+        doc="weighted mean — non-robust baseline",
+    )
+    register(
+        "cwmed",
+        flat=lambda sp: _flatagg.weighted_cwmed,
+        pallas=lambda sp: partial(_ops().wcwmed, interpret=_interp(sp)),
+        stacked=lambda sp: _stk().stacked_cwmed,
+        doc="ω-CWMed — weighted coordinate-wise median (Lemma C.3)",
+    )
+    register(
+        "gm",
+        flat=lambda sp: partial(_flatagg.weighted_gm, iters=sp.iters,
+                                **sp.kwargs),
+        pallas=lambda sp: partial(_ops().wgm, iters=sp.iters,
+                                  interpret=_interp(sp), **sp.kwargs),
+        stacked=lambda sp: partial(_stk().stacked_gm, iters=sp.iters,
+                                   **sp.kwargs),
+        doc="ω-GM / ω-RFA — weighted geometric median (Lemma C.1)",
+    )
+    register(
+        "cwtm",
+        flat=lambda sp: partial(_flatagg.weighted_cwtm, lam=_cwtm_lam(sp)),
+        stacked=lambda sp: partial(_stk().stacked_cwtm, lam=_cwtm_lam(sp)),
+        doc="ω-CWTM — weighted coordinate-wise trimmed mean",
+    )
+    register(
+        "krum",
+        flat=lambda sp: partial(_flatagg.krum, **sp.kwargs),
+        stacked=lambda sp: partial(_stk().stacked_krum, **sp.kwargs),
+        doc="Krum (Blanchard et al. 2017) — unweighted baseline",
+    )
+    register(
+        "ctma",
+        flat=_flat_ctma,
+        pallas=_pallas_ctma,
+        stacked=_stacked_ctma,
+        composes=True,
+        doc="ω-CTMA (Alg. 1) — centered trimmed meta-aggregator over :base",
+    )
+    register(
+        "bucketing",
+        flat=_flat_bucketing,
+        composes=True,
+        doc="bucketing meta-rule (Karimireddy et al. 2020) over :base",
+    )
+    register(
+        "zeno",
+        flat=lambda sp: partial(weighted_zeno, lam=sp.lam, **sp.kwargs),
+        stacked=lambda sp: partial(stacked_zeno, lam=sp.lam, **sp.kwargs),
+        doc="Zeno++-style descent scoring (Xie et al.), weighted trim",
+    )
+
+
+_register_builtins()
+
+# Every built-in spec the cross-backend parity suite sweeps.
+AGGREGATOR_SPECS = ("mean", "cwmed", "gm", "cwtm", "krum",
+                    "ctma:cwmed", "ctma:gm", "bucketing:cwmed", "zeno")

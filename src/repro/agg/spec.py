@@ -1,0 +1,105 @@
+"""Aggregator spec grammar and the parsed :class:`AggregatorSpec`.
+
+One string names one aggregation pipeline:
+
+    rule[:base][@backend]
+
+    rule     — registered rule name: ``mean | cwmed | gm | cwtm | krum |
+               ctma | bucketing | zeno`` (``repro.agg.registry`` is open —
+               register more).
+    base     — meta-rule composition: the inner rule a meta-aggregator wraps
+               (``ctma:gm`` anchors ω-CTMA at the weighted geometric median;
+               ``bucketing:cwmed`` aggregates bucket means with ω-CWMed).
+    backend  — flat-matrix execution engine: ``jnp`` (pure-XLA oracle),
+               ``pallas`` (fused kernels; interpret mode off-TPU), or ``auto``
+               (default: pallas on TPU, jnp elsewhere). Stacked-pytree inputs
+               always take the leaf-wise path with its single global distance
+               pass, regardless of backend.
+
+Examples: ``"cwmed"``, ``"ctma:gm@pallas"``, ``"bucketing:cwmed@jnp"``.
+
+Numeric parameters (``lam``, ``iters``, rule-specific extras like Krum's
+``n_byz`` or Zeno's ``rho``) are carried on the spec, not in the string —
+pass them to :func:`parse` / :func:`repro.agg.resolve` as keyword arguments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple, Union
+
+BACKENDS = ("auto", "jnp", "pallas")
+
+DEFAULT_GM_ITERS = 32
+
+
+class AggregatorSpec(NamedTuple):
+    """Parsed, hashable description of one aggregation pipeline."""
+    rule: str                               # registered rule name
+    base: Optional[str] = None              # inner rule for meta-aggregators
+    backend: str = "auto"                   # auto | jnp | pallas (flat inputs)
+    lam: float = 0.0                        # λ: trimmed weight mass / band
+    iters: int = DEFAULT_GM_ITERS           # Weiszfeld iterations (gm paths)
+    interpret: Optional[bool] = None        # pallas interpret override (None=auto)
+    params: Tuple[Tuple[str, object], ...] = ()  # sorted rule-specific extras
+
+    @property
+    def canonical(self) -> str:
+        """The spec string this parses back from (backend kept if non-auto)."""
+        s = self.rule if self.base is None else f"{self.rule}:{self.base}"
+        return s if self.backend == "auto" else f"{s}@{self.backend}"
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+
+SpecLike = Union[str, AggregatorSpec]
+
+
+def parse(spec: SpecLike, *, lam: Optional[float] = None,
+          iters: Optional[int] = None, backend: Optional[str] = None,
+          interpret: Optional[bool] = None, **extra) -> AggregatorSpec:
+    """Parse ``rule[:base][@backend]`` (or refine an existing spec).
+
+    Keyword arguments override spec fields; a backend embedded in the string
+    (``...@pallas``) takes precedence over the ``backend=`` keyword, so config
+    strings can pin their engine while call sites supply a default.
+    """
+    if isinstance(spec, AggregatorSpec):
+        out = spec
+        if lam is not None:
+            out = out._replace(lam=float(lam))
+        if iters is not None:
+            out = out._replace(iters=int(iters))
+        if backend is not None and spec.backend == "auto":
+            out = out._replace(backend=_check_backend(backend))
+        if interpret is not None:
+            out = out._replace(interpret=bool(interpret))
+        if extra:
+            merged = {**dict(out.params), **extra}
+            out = out._replace(params=tuple(sorted(merged.items())))
+        return out
+
+    if not isinstance(spec, str) or not spec.strip():
+        raise TypeError(f"aggregator spec must be a non-empty string or "
+                        f"AggregatorSpec, got {spec!r}")
+    body, sep, bk = spec.strip().lower().partition("@")
+    rule, _, base = body.partition(":")
+    if not rule:
+        raise ValueError(f"malformed aggregator spec {spec!r} "
+                         f"(grammar: rule[:base][@backend])")
+    return AggregatorSpec(
+        rule=rule,
+        base=base or None,
+        backend=_check_backend(bk if sep else (backend or "auto")),
+        lam=float(lam) if lam is not None else 0.0,
+        iters=int(iters) if iters is not None else DEFAULT_GM_ITERS,
+        interpret=interpret,
+        params=tuple(sorted(extra.items())),
+    )
+
+
+def _check_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown agg backend {backend!r}; "
+                       f"choose from {' | '.join(BACKENDS)}")
+    return backend

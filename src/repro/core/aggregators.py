@@ -17,13 +17,22 @@ Implemented rules
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 Array = jnp.ndarray
+
+
+def _tie_tol(cw: Array, half: Array) -> Array:
+    """Tolerance for the exact-tie rule: a float32 cumsum of m weights carries
+    up to ~m·eps relative rounding, so an exact (atol=0) comparison misses
+    genuine ties once prefix sums round (e.g. integer-valued weights past
+    2^24). Scale the tolerance with the prefix length and the half-mass."""
+    m = cw.shape[0]
+    return 4.0 * m * jnp.finfo(cw.dtype).eps * jnp.abs(half)
 
 
 def _weights(s: Optional[Array], m: int, dtype=jnp.float32) -> Array:
@@ -67,9 +76,11 @@ def weighted_median_1d(v: Array, s: Array) -> Array:
     half = 0.5 * cw[-1]
     jstar = jnp.argmax(cw > half)  # first index strictly past half
     med = vs[jstar]
-    # exact-tie handling (mostly relevant for integer weights)
-    tie = jnp.any(jnp.isclose(cw[:-1], half, rtol=0.0, atol=0.0))
-    jtie = jnp.argmax(jnp.isclose(cw, half, rtol=0.0, atol=0.0))
+    # tie handling (mostly relevant for integer weights); the tolerance is
+    # relative — see _tie_tol — because the f32 cumsum rounds
+    tol = _tie_tol(cw, half)
+    tie = jnp.any(jnp.abs(cw[:-1] - half) <= tol)
+    jtie = jnp.argmax(jnp.abs(cw - half) <= tol)
     tied = 0.5 * (vs[jtie] + vs[jnp.minimum(jtie + 1, v.shape[0] - 1)])
     return jnp.where(tie, tied, med)
 
@@ -86,9 +97,9 @@ def weighted_cwmed(x: Array, s: Optional[Array] = None) -> Array:
     past = cw > half
     jstar = jnp.argmax(past, axis=0)                    # (d,)
     med = jnp.take_along_axis(xs, jstar[None], axis=0)[0]
-    tie_mask = jnp.isclose(cw[:-1], half, rtol=0.0, atol=0.0)
-    tie = jnp.any(tie_mask, axis=0)
-    jtie = jnp.argmax(jnp.isclose(cw, half, rtol=0.0, atol=0.0), axis=0)
+    tol = _tie_tol(cw, half)                            # (d,) relative tol
+    tie = jnp.any(jnp.abs(cw[:-1] - half) <= tol, axis=0)
+    jtie = jnp.argmax(jnp.abs(cw - half) <= tol, axis=0)
     vj = jnp.take_along_axis(xs, jtie[None], axis=0)[0]
     vj1 = jnp.take_along_axis(xs, jnp.minimum(jtie + 1, m - 1)[None], axis=0)[0]
     return jnp.where(tie, 0.5 * (vj + vj1), med)
@@ -232,36 +243,15 @@ def c_lambda(name: str, lam: float) -> float:
     raise KeyError(name)
 
 
-_BASES = {
-    "mean": weighted_mean,
-    "cwmed": weighted_cwmed,
-    "gm": weighted_gm,
-    "cwtm": weighted_cwtm,
-    "krum": krum,
-}
-
-
 def make_aggregator(spec: str, lam: float = 0.0, **kw) -> Callable[[Array, Optional[Array]], Array]:
-    """Build an aggregator from a spec string.
-
-    Specs: ``mean | cwmed | gm | cwtm | krum | ctma:<base> | bucketing:<base>``.
-    The returned callable has signature ``agg(X, s=None) -> (d,)``.
-    """
-    spec = spec.lower()
-    if spec.startswith("ctma"):
-        base_name = spec.split(":", 1)[1] if ":" in spec else "cwmed"
-        base = _BASES[base_name]
-        return partial(weighted_ctma, lam=lam, base=base, **kw)
-    if spec.startswith("bucketing"):
-        base_name = spec.split(":", 1)[1] if ":" in spec else "cwmed"
-        return partial(bucketing, inner=_BASES[base_name], **kw)
-    if spec == "cwtm":
-        return partial(weighted_cwtm, lam=max(lam, 1e-3), **kw)
-    if spec == "krum":
-        return partial(krum, **kw)
-    if spec in _BASES:
-        return partial(_BASES[spec], **kw)
-    raise KeyError(f"unknown aggregator spec: {spec}")
+    """Deprecated: use ``repro.agg.resolve(spec, lam=...)`` — the resolved
+    callable keeps the pure-jnp semantics on flat ``(m, d)`` inputs (backend
+    ``jnp``) and additionally accepts stacked pytrees."""
+    warnings.warn("make_aggregator is deprecated; use "
+                  "repro.agg.resolve(spec, lam=...)",
+                  DeprecationWarning, stacklevel=2)
+    from repro.agg import resolve
+    return resolve(spec, lam=lam, backend="jnp", **kw)
 
 
 AGGREGATOR_SPECS = ("mean", "cwmed", "gm", "cwtm", "krum", "ctma:cwmed", "ctma:gm", "bucketing:cwmed")

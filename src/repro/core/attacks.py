@@ -1,9 +1,15 @@
 """Byzantine attack suite (paper Appendix D, weighted/asynchronous variants).
 
-An attack produces the vector a Byzantine worker sends to the parameter server.
-The omniscient attacks (``little``, ``empire``) see the *honest* workers' current
-momentum buffers and their weights, exactly as in the paper's adaptation where
-means/stds are computed coordinate-wise *with respect to the weights*.
+An attack produces the update a Byzantine worker sends to the parameter
+server. The omniscient attacks (``little``, ``empire``) see the *honest*
+workers' current momentum buffers and their weights, exactly as in the paper's
+adaptation where means/stds are computed coordinate-wise *with respect to the
+weights*.
+
+Layout-polymorphic like ``repro.agg``: the buffers may be a flat ``(m, d)``
+matrix or a stacked pytree with ``(m, ...)`` leaves — the weighted mean/std
+are coordinate-wise, hence leaf-separable, and the little-is-enough deviation
+``z_max`` depends only on scalar weight masses.
 
 ``label_flip`` is a data poisoning attack — it is applied inside the engine by
 flipping the labels (y -> 9 - y) before the gradient computation, so it has no
@@ -11,14 +17,16 @@ entry here beyond the label transform helper.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 from jax.scipy.special import ndtri
 
-from .aggregators import weighted_mean, weighted_std
-
 Array = jnp.ndarray
+Pytree = Any
+
+_tmap = jax.tree_util.tree_map
 
 ATTACKS = ("none", "sign_flip", "label_flip", "little", "empire")
 
@@ -49,29 +57,40 @@ def _little_zmax(honest_weight: Array, byz_weight: Array) -> Array:
 
 def byzantine_vector(
     cfg: AttackConfig,
-    honest_d: Array,          # (m, d) current momentum buffers (all workers)
+    honest_d: Pytree,         # (m, d) matrix OR stacked pytree: all buffers
     honest_mask: Array,       # (m,) bool — True for honest workers
     weights: Array,           # (m,) update counts s_t
-    own_update: Array,        # (d,) the vector an honest worker would send
-) -> Array:
-    """Return the Byzantine worker's transmitted vector."""
+    own_update: Pytree,       # (d,) vector / pytree an honest worker would send
+) -> Pytree:
+    """Return the Byzantine worker's transmitted update (same layout as
+    ``own_update`` — flat vector or pytree)."""
     name = cfg.name
     if name in ("none", "label_flip"):
         # label_flip poisons the gradient upstream; the transmission is 'honest'
         return own_update
     if name == "sign_flip":
-        return -own_update
+        return _tmap(jnp.negative, own_update)
 
-    hm = honest_mask.astype(honest_d.dtype)
-    hw = weights * hm
-    mu = weighted_mean(honest_d, hw + 1e-30)
+    hw = (weights * honest_mask.astype(jnp.float32) + 1e-30).astype(jnp.float32)
+    hw_sum = jnp.sum(hw)
+
+    def leaf_mean(l):
+        return jnp.einsum("m,m...->...", hw, l.astype(jnp.float32)) / hw_sum
+
+    mu = _tmap(leaf_mean, honest_d)
     if name == "empire":
-        return -cfg.epsilon * mu
+        return _tmap(lambda m_: -cfg.epsilon * m_, mu)
     if name == "little":
-        sd = weighted_std(honest_d, hw + 1e-30)
+        def leaf_std(l, m_):
+            var = jnp.einsum("m,m...->...", hw,
+                             jnp.square(l.astype(jnp.float32) - m_)) / hw_sum
+            return jnp.sqrt(jnp.maximum(var, 0.0))
+
+        sd = _tmap(leaf_std, honest_d, mu)
         if cfg.z_max is not None:
-            z = jnp.asarray(cfg.z_max, honest_d.dtype)
+            z = jnp.asarray(cfg.z_max, jnp.float32)
         else:
-            z = _little_zmax(jnp.sum(hw), jnp.sum(weights * (1.0 - hm)))
-        return mu - z * sd
+            z = _little_zmax(jnp.sum(weights * honest_mask),
+                             jnp.sum(weights * (~honest_mask)))
+        return _tmap(lambda m_, s_: m_ - z * s_, mu, sd)
     raise KeyError(f"unknown attack: {name}")

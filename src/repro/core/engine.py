@@ -6,7 +6,15 @@ momentum ``d_t^{(i)}``, the server robust-aggregates ALL workers' latest
 buffers weighted by their update counts ``s_t^{(i)}``, applies the AnyTime
 update, and hands the worker the fresh query point.
 
-State layout (flat vectors, d = number of parameters):
+PYTREE-NATIVE state: the model parameters are an arbitrary pytree, and the
+per-worker buffers are STACKED pytrees whose leaves carry a leading worker
+axis ``(m, ...)`` — the same layout as ``dist.steps``, so both paths
+aggregate through the one layout-polymorphic ``repro.agg`` API (and the
+fused Pallas kernels apply to both). A flat ``(d,)`` parameter vector is
+simply the single-leaf case — the thin shim the paper-CNN experiments use:
+every state field then stays a plain array, exactly the legacy layout.
+
+State layout (leaves shown for a flat (d,)-vector model):
     w, x            (d,)    iterate / AnyTime average (query point)
     D               (m, d)  latest momentum from each worker (Alg. 2 line 5)
     S               (m,)    update counts s_t^{(i)}  (the aggregation weights)
@@ -20,34 +28,44 @@ the honest workers' buffers with their weights.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .aggregators import make_aggregator
 from .attacks import AttackConfig, byzantine_vector, flip_labels
 from ..optim.mu2sgd import OptConfig, anytime_coeff
 
 Array = jnp.ndarray
 Pytree = Any
 
+_tmap = jax.tree_util.tree_map
+
+
+def _row(tree: Pytree, i) -> Pytree:
+    """Slice worker i's row out of a stacked tree."""
+    return _tmap(lambda l: l[i], tree)
+
+
+def _set_row(tree: Pytree, i, val: Pytree) -> Pytree:
+    return _tmap(lambda l, v: l.at[i].set(v), tree, val)
+
 
 class EngineConfig(NamedTuple):
     m: int                                  # number of workers
     byz: tuple                              # tuple of Byzantine worker ids
     attack: AttackConfig = AttackConfig()
-    agg: str = "ctma:cwmed"                 # aggregator spec
+    agg: str = "ctma:cwmed"                 # repro.agg spec: rule[:base][@backend]
     lam: float = 0.2                        # λ for the meta-aggregator / trimming
     opt: OptConfig = OptConfig(name="mu2", lr=0.01, gamma=0.1, beta=0.25)
     arrival: str = "proportional"           # proportional | squared | uniform | round_robin
     byz_start_step: int = 0                 # attacks activate after this iteration
     n_classes: int = 10
     seed: int = 0
-    # Aggregation backend. The server aggregation is O(m·d) over the full
-    # momentum buffer every iteration — far from free at production d.
+    # Flat-matrix aggregation backend (repro.agg): the server aggregation is
+    # O(m·d) over the full momentum buffer every iteration — far from free at
+    # production d. A backend embedded in ``agg`` ("ctma:gm@pallas") wins.
     #   auto   — fused Pallas kernels on TPU, jnp oracle elsewhere
     #   pallas — force the fused kernel path (interpret mode off-TPU)
     #   jnp    — force the pure-jnp aggregators
@@ -55,11 +73,11 @@ class EngineConfig(NamedTuple):
 
 
 class EngineState(NamedTuple):
-    w: Array
-    x: Array
-    D: Array
+    w: Pytree
+    x: Pytree
+    D: Pytree
     S: Array
-    Xq: Array
+    Xq: Pytree
     t: Array
     t_byz: Array
     key: Array
@@ -85,15 +103,18 @@ def expected_lambda(cfg: EngineConfig) -> float:
 
 
 class AsyncByzantineEngine:
-    """Runs Alg. 2 for an arbitrary model given a flat loss/grad function.
+    """Runs Alg. 2 for an arbitrary model given a pytree loss function.
 
     Args:
       cfg: engine configuration.
-      loss_fn: ``loss_fn(flat_params, batch) -> scalar`` — differentiable.
-      d_dim: number of parameters (flattened).
+      loss_fn: ``loss_fn(params, batch) -> scalar`` — differentiable in the
+        params pytree. A flat ``(d,)`` vector is a valid (single-leaf) pytree.
+      d_dim: legacy hint for the flat-vector shim (unused — shapes come from
+        the params handed to ``init``); kept so existing callers don't break.
     """
 
-    def __init__(self, cfg: EngineConfig, loss_fn: Callable[[Array, Any], Array], d_dim: int):
+    def __init__(self, cfg: EngineConfig, loss_fn: Callable[[Pytree, Any], Array],
+                 d_dim: Optional[int] = None):
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.d_dim = d_dim
@@ -109,28 +130,23 @@ class AsyncByzantineEngine:
 
     @staticmethod
     def _make_agg_fn(cfg: EngineConfig):
-        backend = getattr(cfg, "agg_backend", "auto")
-        if backend not in ("auto", "pallas", "jnp"):
-            raise KeyError(f"unknown agg_backend {backend!r}; "
-                           "choose from auto | pallas | jnp")
-        if backend == "auto":
-            backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
-        if backend == "pallas":
-            from ..kernels.ops import make_kernel_aggregator
-            return make_kernel_aggregator(
-                cfg.agg, lam=cfg.lam, interpret=jax.default_backend() != "tpu")
-        return make_aggregator(cfg.agg, lam=cfg.lam)
+        """ONE resolve path (repro.agg): the returned callable dispatches per
+        layout, so the same engine serves flat-vector and pytree models."""
+        from repro.agg import resolve
+        return resolve(cfg.agg, lam=cfg.lam,
+                       backend=getattr(cfg, "agg_backend", "auto"))
 
     # -- initialization ----------------------------------------------------
-    def init(self, params_flat: Array, init_batches: Any) -> EngineState:
+    def init(self, params: Pytree, init_batches: Any) -> EngineState:
         """Alg. 2 line 2: every worker computes d_1 at x_1 on its own sample.
 
+        ``params`` is the model pytree (or a flat ``(d,)`` vector);
         ``init_batches`` has leading axis m (one minibatch per worker).
         """
         cfg = self.cfg
-        x1 = jnp.asarray(params_flat)
+        x1 = _tmap(jnp.asarray, params)
         # independent buffers: the step donates the state, so no aliasing allowed
-        self._anchor = x1.copy()  # projection center for the compact-K assumption
+        self._anchor = _tmap(lambda l: l.copy(), x1)  # compact-K projection center
 
         def one(i, batch):
             lk = "y" if "y" in batch else "labels"
@@ -141,11 +157,18 @@ class AsyncByzantineEngine:
 
         D = jax.vmap(one, in_axes=(0, 0))(jnp.arange(cfg.m), init_batches)
         if cfg.attack.name == "sign_flip" and cfg.byz_start_step <= 0:
-            D = jnp.where(self.byz_mask[:, None], -D, D)
+            mask = self.byz_mask
+
+            def flip(l):
+                byz = mask.reshape((cfg.m,) + (1,) * (l.ndim - 1))
+                return jnp.where(byz, -l, l)
+
+            D = _tmap(flip, D)
         S = jnp.zeros((cfg.m,), jnp.float32)
-        Xq = jnp.broadcast_to(x1, (cfg.m, self.d_dim)).copy()
+        Xq = _tmap(lambda l: jnp.broadcast_to(l, (cfg.m,) + l.shape).copy(), x1)
         return EngineState(
-            w=x1.copy(), x=x1.copy(), D=D, S=S, Xq=Xq,
+            w=_tmap(lambda l: l.copy(), x1), x=_tmap(lambda l: l.copy(), x1),
+            D=D, S=S, Xq=Xq,
             t=jnp.zeros((), jnp.int32), t_byz=jnp.zeros((), jnp.int32),
             key=jax.random.PRNGKey(cfg.seed),
         )
@@ -175,23 +198,28 @@ class AsyncByzantineEngine:
         loss, g = self.value_grad_fn(query, batch_used)
 
         s_new = state.S[i] + 1.0
+        d_prev = _row(state.D, i)
         if opt.name == "mu2":
-            g_tilde = self.grad_fn(state.Xq[i], batch_used)  # same sample z_t
+            g_tilde = self.grad_fn(_row(state.Xq, i), batch_used)  # same sample z_t
             beta = (jnp.asarray(opt.beta, jnp.float32) if opt.beta is not None
                     else 1.0 / jnp.maximum(s_new, 1.0))
-            d_honest = jnp.where(s_new <= 1.0, g, g + (1.0 - beta) * (state.D[i] - g_tilde))
+            d_honest = _tmap(
+                lambda gl, dl, gtl: jnp.where(s_new <= 1.0, gl,
+                                              gl + (1.0 - beta) * (dl - gtl)),
+                g, d_prev, g_tilde)
         elif opt.name == "momentum":
             beta = 0.9 if opt.beta is None else opt.beta
-            d_honest = beta * state.D[i] + (1.0 - beta) * g
+            d_honest = _tmap(lambda dl, gl: beta * dl + (1.0 - beta) * gl,
+                             d_prev, g)
         else:  # sgd
             d_honest = g
 
         atk = byzantine_vector(cfg.attack, state.D, ~self.byz_mask, state.S, d_honest)
-        d_sent = jnp.where(is_byz, atk, d_honest)
+        d_sent = _tmap(lambda a, h: jnp.where(is_byz, a, h), atk, d_honest)
 
-        D = state.D.at[i].set(d_sent)
+        D = _set_row(state.D, i, d_sent)
         S = state.S.at[i].set(s_new)
-        Xq = state.Xq.at[i].set(query)
+        Xq = _set_row(state.Xq, i, query)
 
         # --- server update (lines 4-7) --------------------------------------
         d_hat = self.agg_fn(D, S)
@@ -200,15 +228,19 @@ class AsyncByzantineEngine:
         alpha = (t_next.astype(jnp.float32)
                  if (opt.name == "mu2" and opt.gamma is None)
                  else jnp.asarray(1.0, jnp.float32))
-        w_new = state.w - opt.lr * alpha * d_hat
+        w_new = _tmap(lambda wl, dl: wl - opt.lr * alpha * dl, state.w, d_hat)
         if opt.proj_radius is not None:
-            # Π_K: project onto the ball of radius proj_radius around x_1 (compact K)
-            diff = w_new - self._anchor
-            norm = jnp.linalg.norm(diff)
-            w_new = self._anchor + diff * jnp.minimum(1.0, opt.proj_radius / jnp.maximum(norm, 1e-30))
+            # Π_K: project onto the ball of radius proj_radius around x_1
+            # (compact K) — GLOBAL norm across all leaves
+            diff = _tmap(jnp.subtract, w_new, self._anchor)
+            sq = sum(jnp.sum(jnp.square(l))
+                     for l in jax.tree_util.tree_leaves(diff))
+            scale = jnp.minimum(1.0, opt.proj_radius
+                                / jnp.maximum(jnp.sqrt(sq), 1e-30))
+            w_new = _tmap(lambda a, dl: a + scale * dl, self._anchor, diff)
         if opt.name == "mu2":
             gcoef = anytime_coeff(t_next + 1, opt.gamma)
-            x_new = state.x + gcoef * (w_new - state.x)
+            x_new = _tmap(lambda xl, wl: xl + gcoef * (wl - xl), state.x, w_new)
         else:
             x_new = w_new
 
@@ -224,7 +256,7 @@ class AsyncByzantineEngine:
         return self._step(state, batch)
 
     def run(self, state: EngineState, batches, steps: int,
-            eval_fn: Optional[Callable[[Array], dict]] = None,
+            eval_fn: Optional[Callable[[Pytree], dict]] = None,
             eval_every: int = 0) -> tuple[EngineState, list]:
         """Drive the loop; ``batches`` is an iterator of per-step minibatches."""
         history = []

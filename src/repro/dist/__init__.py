@@ -8,7 +8,9 @@ from .robust import (  # noqa: F401
     make_stacked_aggregator,
     stacked_ctma,
     stacked_cwmed,
+    stacked_cwtm,
     stacked_gm,
+    stacked_krum,
     stacked_mean,
 )
 from .steps import (  # noqa: F401

@@ -22,13 +22,13 @@ HBM passes over the stacked tree X (d = total parameter count):
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregators import weighted_cwmed
+from repro.core.aggregators import weighted_cwmed, weighted_cwtm
 
 Array = jnp.ndarray
 Pytree = Any
@@ -123,30 +123,54 @@ def stacked_ctma(tree: Pytree, s: Optional[Array] = None, *, lam: float,
     return _combine(tree, kept, jnp.maximum(thresh, 1e-30))
 
 
-# ---------------------------------------------------------------------------
-# Registry
-# ---------------------------------------------------------------------------
+def stacked_cwtm(tree: Pytree, s: Optional[Array] = None, *,
+                 lam: float = 0.25) -> Pytree:
+    """ω-CWTM: coordinate-wise like cwmed, hence exactly leaf-separable."""
+    s = _weights(s, _lead(tree))
 
-_BASES = {
-    "mean": stacked_mean,
-    "cwmed": stacked_cwmed,
-    "gm": stacked_gm,
-}
+    def leaf(x):
+        return weighted_cwtm(_flat2(x).astype(jnp.float32), s,
+                             lam=lam).reshape(x.shape[1:])
 
+    return _tmap(leaf, tree)
+
+
+def stacked_pairwise_sqdist(tree: Pytree) -> Array:
+    """Global (m, m) pairwise squared distances in ONE pass over the tree.
+
+    Differences are formed directly (like the flat ``core.aggregators.krum``)
+    rather than via the Gram identity ‖x_i‖² + ‖x_j‖² − 2⟨x_i,x_j⟩, whose
+    float32 cancellation zeroes out small distances between large-norm rows —
+    exactly the clustered-honest-momenta regime Krum ranks on."""
+    def part(x):
+        xf = _flat2(x).astype(jnp.float32)
+        return jnp.sum(jnp.square(xf[:, None, :] - xf[None, :, :]), axis=-1)
+
+    return sum(jax.tree_util.tree_leaves(_tmap(part, tree)))
+
+
+def stacked_krum(tree: Pytree, s: Optional[Array] = None, *,
+                 n_byz: int = 1) -> Pytree:
+    """Krum on a stacked tree: one global pairwise-distance pass, then the
+    winning row sliced out leaf-wise (ignores weights — classical rule)."""
+    m = _lead(tree)
+    d2 = jnp.where(jnp.eye(m, dtype=bool), jnp.inf, stacked_pairwise_sqdist(tree))
+    k = max(m - n_byz - 2, 1)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    i = jnp.argmin(scores)
+    return _tmap(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Legacy factory — deprecated shim over the unified registry
+# ---------------------------------------------------------------------------
 
 def make_stacked_aggregator(spec: str, lam: float = 0.0, **kw
                             ) -> Callable[[Pytree, Optional[Array]], Pytree]:
-    """Build a stacked aggregator from a spec string.
-
-    Specs: ``mean | cwmed | gm | ctma:<base>`` — the subset of
-    ``core.aggregators.AGGREGATOR_SPECS`` that the distributed hot path
-    supports. The returned callable has signature ``agg(tree, s=None)`` and
-    preserves the tree structure (leaves lose their leading group axis).
-    """
-    spec = spec.lower()
-    if spec.startswith("ctma"):
-        base_name = spec.split(":", 1)[1] if ":" in spec else "cwmed"
-        return partial(stacked_ctma, lam=lam, base=_BASES[base_name], **kw)
-    if spec in _BASES:
-        return partial(_BASES[spec], **kw)
-    raise KeyError(f"unknown stacked aggregator spec: {spec}")
+    """Deprecated: use :func:`repro.agg.resolve` — the resolved callable
+    accepts stacked pytrees (this layer) AND flat ``(m, d)`` matrices."""
+    warnings.warn("make_stacked_aggregator is deprecated; use "
+                  "repro.agg.resolve(spec, lam=...) — the resolved callable "
+                  "is layout-polymorphic", DeprecationWarning, stacklevel=2)
+    from repro.agg import resolve
+    return resolve(spec, lam=lam, **kw)

@@ -6,9 +6,10 @@ Every factory returns a PURE function ``step(...) -> (..., metrics)`` suitable
 for ``jax.jit`` — callers add shardings (launch/specs.py) and donation
 (``donate_argnums=(0,)`` so the train state / KV cache updates in place). The
 robust step keeps per-group corrected momenta as a STACKED pytree — leaves
-carry a leading ``(n_groups, ...)`` axis — and aggregates through
-``dist.robust`` so the CTMA/GM distance pass runs once globally across leaves
-with no O(m·d) flatten copy (see dist/README.md for the HBM accounting).
+carry a leading ``(n_groups, ...)`` axis — and aggregates through the unified
+``repro.agg`` API, whose stacked branch (dist/robust.py) runs the CTMA/GM
+distance pass once globally across leaves with no O(m·d) flatten copy (see
+dist/README.md for the HBM accounting).
 
 Byzantine group behaviors follow core.attacks (Appendix D), adapted to the
 group setting: label_flip poisons a group's labels before its gradients;
@@ -38,7 +39,7 @@ _tmap = jax.tree_util.tree_map
 class RobustDPConfig(NamedTuple):
     """Robust data-parallel group configuration (server side of Alg. 2)."""
     n_groups: int = 4
-    agg: str = "ctma:cwmed"          # dist.robust spec: mean|cwmed|gm|ctma:<base>
+    agg: str = "ctma:cwmed"          # repro.agg spec: rule[:base][@backend]
     lam: float = 0.25                # λ for the meta-aggregator
     byz_groups: Tuple[int, ...] = ()
     byz_attack: str = "none"         # none | sign_flip | label_flip | little | empire
@@ -168,9 +169,11 @@ def make_robust_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
     ``n_groups`` groups; each computes its corrected momentum on its shard;
     Byzantine groups corrupt theirs; the server robust-aggregates the stacked
     buffers weighted per ``weight_mode`` and applies the AnyTime update."""
-    from .robust import make_stacked_aggregator
+    from repro.agg import resolve
 
-    agg_fn = make_stacked_aggregator(rcfg.agg, lam=rcfg.lam)
+    # one resolve path with core.engine: the stacked momenta take the
+    # leaf-wise global-distance-pass branch of the layout-polymorphic callable
+    agg_fn = resolve(rcfg.agg, lam=rcfg.lam)
     G = rcfg.n_groups
     label_flip_on = (rcfg.byz_attack == "label_flip" and bool(rcfg.byz_groups))
     byz_list = list(rcfg.byz_groups)

@@ -17,6 +17,7 @@ HBM-pass accounting for the (m, d) update matrix X (see wctma_fused.py):
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable, Optional
 
@@ -30,6 +31,17 @@ from .wreduce import gm_step_padded, sqdist_pallas, wcomb_padded, wcomb_pallas
 from .wctma_fused import (DEFAULT_BLOCK_D as FUSED_BLOCK_D, trim_weights,
                           wctma_fused)
 from .swa import swa_decode_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def wmean(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *,
+          interpret: bool = True) -> jnp.ndarray:
+    """Weighted mean of (m, d) rows via the single-pass combine kernel."""
+    if s is None:
+        s = jnp.ones((x.shape[0],), jnp.float32)
+    xp, d, bd = pad_cols(x, FUSED_BLOCK_D)
+    return wcomb_padded(xp, s, jnp.sum(s.astype(jnp.float32)), bd,
+                        interpret=interpret)[:d]
 
 
 def wcwmed(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *,
@@ -108,42 +120,25 @@ def _wctma_gm_pallas(x: jnp.ndarray, s: jnp.ndarray, *, lam: float,
                         interpret=interpret)[:d]
 
 
+def wctma_gm(x: jnp.ndarray, s: Optional[jnp.ndarray] = None, *, lam: float,
+             iters: int = 32, interpret: bool = True) -> jnp.ndarray:
+    """ω-CTMA anchored at the weighted geometric median (shared padded X)."""
+    if s is None:
+        s = jnp.ones((x.shape[0],), jnp.float32)
+    return _wctma_gm_pallas(x, s, lam=lam, iters=iters, interpret=interpret)
+
+
 def make_kernel_aggregator(spec: str, lam: float = 0.0, *,
                            interpret: bool = True
                            ) -> Callable[[jnp.ndarray, Optional[jnp.ndarray]], jnp.ndarray]:
-    """Kernel-backed analogue of ``core.aggregators.make_aggregator``.
-
-    Routes ``mean | cwmed | gm | ctma:cwmed | ctma:gm`` through the fused
-    Pallas paths; any other spec falls back to the jnp aggregator (those rules
-    are either O(m²d) pairwise or sort-heavy and are benchmark baselines, not
-    hot paths). The returned callable has signature ``agg(X, s=None) -> (d,)``.
-    """
-    spec = spec.lower()
-
-    def _mean(x, s=None):
-        if s is None:
-            s = jnp.ones((x.shape[0],), jnp.float32)
-        xp, d, bd = pad_cols(x, FUSED_BLOCK_D)
-        return wcomb_padded(xp, s, jnp.sum(s.astype(jnp.float32)), bd,
-                            interpret=interpret)[:d]
-
-    if spec == "mean":
-        return jax.jit(_mean)
-    if spec == "cwmed":
-        return partial(wcwmed, interpret=interpret)
-    if spec == "gm":
-        # iters matches the jnp registry default (core.aggregators.weighted_gm)
-        return partial(wgm, iters=32, interpret=interpret)
-    if spec.startswith("ctma"):
-        base = spec.split(":", 1)[1] if ":" in spec else "cwmed"
-        if base == "cwmed":
-            return partial(wctma, lam=lam, interpret=interpret)
-        if base == "gm":
-            return lambda x, s=None: _wctma_gm_pallas(
-                x, jnp.ones((x.shape[0],), jnp.float32) if s is None else s,
-                lam=lam, interpret=interpret)
-    from repro.core.aggregators import make_aggregator
-    return make_aggregator(spec, lam=lam)
+    """Deprecated: use ``repro.agg.resolve(spec, backend="pallas")`` — the
+    resolved callable also accepts stacked pytrees, and rules without a fused
+    pipeline degrade to the jnp oracle exactly as this factory did."""
+    warnings.warn("make_kernel_aggregator is deprecated; use "
+                  "repro.agg.resolve(spec, lam=..., backend='pallas')",
+                  DeprecationWarning, stacklevel=2)
+    from repro.agg import resolve
+    return resolve(spec, lam=lam, backend="pallas", interpret=interpret)
 
 
 def swa_decode(q, k_cache, v_cache, pos, *, local: bool,

@@ -174,7 +174,8 @@ def _probe_costs(cfg, shape, opt_cfg, robust_cfg, mesh) -> dict:
 
 
 def dryrun_one(arch: str, shape: str, *, multi_pod: bool = False,
-               robust: bool = False, opt_name: str = "mu2",
+               robust: bool = False, agg: str = "ctma:cwmed",
+               opt_name: str = "mu2",
                implicit_x_prev: bool = False, save: bool = True,
                verbose: bool = True, probe: bool = True,
                debug_mesh: bool = False, cfg_override=None) -> dict:
@@ -204,7 +205,7 @@ def dryrun_one(arch: str, shape: str, *, multi_pod: bool = False,
     robust_cfg = None
     if robust and sh.mode == "train":
         dp = n_chips // mesh.shape["model"]
-        robust_cfg = RobustDPConfig(n_groups=min(dp, 32), agg="ctma:cwmed", lam=0.25)
+        robust_cfg = RobustDPConfig(n_groups=min(dp, 32), agg=agg, lam=0.25)
 
     # 1) FULL config lower+compile (scan mode) — the pass/fail gate; its
     #    memory_analysis sees the true full-model argument/temp footprint.
@@ -277,6 +278,8 @@ def main() -> None:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--robust", action="store_true")
+    ap.add_argument("--agg", default="ctma:cwmed",
+                    help="repro.agg spec for --robust: rule[:base][@backend]")
     ap.add_argument("--opt", default="mu2")
     ap.add_argument("--implicit-x-prev", action="store_true")
     ap.add_argument("--debug-mesh", action="store_true",
@@ -297,6 +300,7 @@ def main() -> None:
     for a, s, mp in combos:
         try:
             rec = dryrun_one(a, s, multi_pod=mp, robust=args.robust,
+                             agg=args.agg,
                              opt_name=args.opt, implicit_x_prev=args.implicit_x_prev,
                              debug_mesh=args.debug_mesh, probe=not args.no_probe,
                              save=not args.debug_mesh)

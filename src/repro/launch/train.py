@@ -36,7 +36,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--opt", default="mu2", choices=["mu2", "momentum", "sgd"])
     ap.add_argument("--robust", action="store_true")
     ap.add_argument("--groups", type=int, default=4)
-    ap.add_argument("--agg", default="ctma:cwmed")
+    ap.add_argument("--agg", default="ctma:cwmed",
+                    help="repro.agg spec: rule[:base][@backend], e.g. "
+                         "ctma:gm@pallas | cwmed | zeno")
     ap.add_argument("--lam", type=float, default=0.25)
     ap.add_argument("--byz-groups", type=int, default=0)
     ap.add_argument("--byz-attack", default="sign_flip")

@@ -1,0 +1,301 @@
+"""Unified aggregator API (`repro.agg`): spec grammar, cross-backend parity,
+layout polymorphism, legacy-factory back-compat, and the pytree-native engine.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import agg
+from repro.core import AsyncByzantineEngine, AttackConfig, EngineConfig
+from repro.optim import OptConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(m, d, seed=0):
+    k = jax.random.fold_in(KEY, seed)
+    k1, k2 = jax.random.split(k)
+    x = jax.random.normal(k1, (m, d))
+    s = jax.random.uniform(k2, (m,), minval=0.1, maxval=3.0)
+    return x, s
+
+
+def _as_tree(x):
+    """Split an (m, d) matrix into a nested stacked pytree (d >= 16)."""
+    m, d = x.shape
+    c = d // 4
+    return {"a": x[:, :2 * c].reshape(m, 2, c),
+            "b": {"c": x[:, 2 * c:3 * c], "d": x[:, 3 * c:]}}
+
+
+def _flat_result(tree_out, d):
+    leaves = [tree_out["a"].reshape(-1), tree_out["b"]["c"].reshape(-1),
+              tree_out["b"]["d"].reshape(-1)]
+    out = jnp.concatenate(leaves)
+    assert out.shape == (d,)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# spec grammar
+# ---------------------------------------------------------------------------
+
+def test_parse_grammar():
+    sp = agg.parse("ctma:gm@pallas", lam=0.3, iters=16)
+    assert (sp.rule, sp.base, sp.backend, sp.lam, sp.iters) == \
+        ("ctma", "gm", "pallas", 0.3, 16)
+    assert sp.canonical == "ctma:gm@pallas"
+    # embedded backend beats the keyword; keyword fills when absent
+    assert agg.parse("cwmed@jnp", backend="pallas").backend == "jnp"
+    assert agg.parse("cwmed", backend="pallas").backend == "pallas"
+    # refine an existing spec
+    sp2 = agg.parse(sp, lam=0.1)
+    assert sp2.lam == 0.1 and sp2.base == "gm"
+    # extras ride along as sorted params
+    assert agg.parse("krum", n_byz=2).kwargs == {"n_byz": 2}
+
+
+def test_parse_rejects_malformed():
+    with pytest.raises(KeyError):
+        agg.parse("cwmed@cuda")
+    with pytest.raises((TypeError, ValueError)):
+        agg.parse("")
+    with pytest.raises(KeyError):
+        agg.resolve("no_such_rule")
+    with pytest.raises(ValueError):
+        agg.resolve("cwmed:gm")  # cwmed does not compose
+    with pytest.raises(KeyError):
+        agg.resolve("ctma:no_such_base")
+
+
+# ---------------------------------------------------------------------------
+# cross-backend parity: jnp oracle vs pallas kernels vs stacked pytree path
+# ---------------------------------------------------------------------------
+
+CASES = [
+    ("random", 9, 64),
+    ("m1", 1, 64),          # single worker
+    ("equal", 8, 64),       # all-equal weights (exact-tie territory)
+]
+
+
+@pytest.mark.parametrize("spec", agg.AGGREGATOR_SPECS)
+@pytest.mark.parametrize("case,m,d", CASES)
+def test_cross_backend_parity(spec, case, m, d):
+    x, s = _rand(m, d, seed=(sum(map(ord, spec + case)) + m) % 1000)
+    if case == "equal":
+        s = jnp.full((m,), 2.0)
+    want = agg.resolve(spec, lam=0.25, backend="jnp")(x, s)
+    got_pallas = agg.resolve(spec, lam=0.25, backend="pallas")(x, s)
+    got_stacked = _flat_result(
+        agg.resolve(spec, lam=0.25)(_as_tree(x), s), d)
+    np.testing.assert_allclose(np.asarray(got_pallas), np.asarray(want),
+                               atol=2e-4, rtol=2e-4, err_msg=f"{spec} pallas")
+    np.testing.assert_allclose(np.asarray(got_stacked), np.asarray(want),
+                               atol=2e-4, rtol=2e-4, err_msg=f"{spec} stacked")
+
+
+def test_single_leaf_rank3_array_takes_stacked_path():
+    """A bare (m, a, b) array is a stacked single-leaf tree: the leading axis
+    reduces, the trailing shape survives."""
+    x, s = _rand(7, 24, seed=5)
+    out = agg.resolve("ctma:cwmed", lam=0.25)(x.reshape(7, 4, 6), s)
+    assert out.shape == (4, 6)
+    want = agg.resolve("ctma:cwmed", lam=0.25, backend="jnp")(x, s)
+    np.testing.assert_allclose(np.asarray(out).reshape(-1), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_zeno_rejects_corrupt_rows():
+    """The Zeno++-style spec trims rows whose descent score is poisoned."""
+    x, s = _rand(9, 32, seed=7)
+    x = (x * 0.1 + 1.0).at[7:].set(-50.0)  # two corrupt workers
+    out = agg.resolve("zeno", lam=0.3)(x, s)
+    assert float(jnp.mean(out)) > 0.5  # honest rows average ≈ +1
+    # and the same spec on the stacked layout
+    out_t = agg.resolve("zeno", lam=0.3)(_as_tree(x), s)
+    np.testing.assert_allclose(np.asarray(_flat_result(out_t, 32)),
+                               np.asarray(out), atol=1e-5)
+
+
+def test_composed_spec_routes_extras_to_base():
+    """ctma:krum with n_byz must hand n_byz to the krum anchor, not crash
+    weighted_ctma; an un-stackable base (bucketing) falls back to the
+    flatten adapter instead of a broken callable."""
+    x, s = _rand(8, 32, seed=11)
+    tree = _as_tree(x)
+    f = agg.resolve("ctma:krum", lam=0.25, n_byz=2)
+    np.testing.assert_allclose(np.asarray(_flat_result(f(tree, s), 32)),
+                               np.asarray(f(x, s)), atol=1e-4)
+    out = agg.resolve("ctma:bucketing", lam=0.25)(tree, s)
+    np.testing.assert_allclose(
+        np.asarray(_flat_result(out, 32)),
+        np.asarray(agg.resolve("ctma:bucketing", lam=0.25, backend="jnp")(x, s)),
+        atol=1e-5)
+
+
+def test_legacy_gm_shim_forwards_eps():
+    """Regression: the deprecated make_aggregator must forward rule-specific
+    kwargs (weighted_gm's eps) exactly like the old factory did."""
+    from repro.core.aggregators import make_aggregator, weighted_gm
+    x, s = _rand(6, 16, seed=13)
+    with pytest.warns(DeprecationWarning):
+        got = make_aggregator("gm", eps=5.0)(x, s)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(weighted_gm(x, s, eps=5.0)), atol=1e-6)
+    assert not np.allclose(np.asarray(got), np.asarray(weighted_gm(x, s)))
+
+
+def test_stacked_krum_no_gram_cancellation():
+    """Regression: pairwise distances must be formed by direct differences —
+    the float32 Gram identity zeroes small gaps between large-norm rows and
+    flips Krum's ranking on clustered honest momenta."""
+    from repro.core import krum
+    from repro.dist.robust import stacked_krum
+    k = jax.random.fold_in(KEY, 17)
+    x = jnp.full((12,), 1000.0)[None, :] + 1e-3 * jax.random.normal(k, (6, 12))
+    tree = {"a": x[:, :8], "b": x[:, 8:]}
+    pick = stacked_krum(tree, n_byz=1)
+    got = jnp.concatenate([pick["a"], pick["b"]])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(krum(x, n_byz=1)))
+
+
+def test_jnp_resolve_does_not_import_kernels():
+    """backend='jnp' flat aggregation must not pull in the Pallas kernel
+    package or the dist layer (lazy builders)."""
+    import pathlib, subprocess, sys
+    src = pathlib.Path(__file__).resolve().parents[1] / "src"
+    code = (f"import sys; sys.path.insert(0, {str(src)!r}); "
+            "from repro.agg import resolve; import jax.numpy as jnp; "
+            "resolve('ctma:cwmed', lam=0.2, backend='jnp')"
+            "(jnp.ones((4, 8)), jnp.ones(4)); "
+            "assert 'repro.kernels.ops' not in sys.modules; "
+            "assert 'repro.dist.robust' not in sys.modules")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True)
+    assert r.returncode == 0, r.stderr
+
+
+def test_register_custom_rule():
+    """The registry is open: a one-line rule becomes a first-class spec."""
+    agg.register("byzmax", flat=lambda sp: lambda x, s=None: jnp.max(x, axis=0))
+    try:
+        x, _ = _rand(5, 8)
+        np.testing.assert_allclose(np.asarray(agg.resolve("byzmax")(x)),
+                                   np.asarray(jnp.max(x, axis=0)))
+    finally:
+        agg.rules()  # registry intact
+        del agg.registry._RULES["byzmax"]
+
+
+# ---------------------------------------------------------------------------
+# back-compat: legacy factories + EngineConfig backends route through repro.agg
+# ---------------------------------------------------------------------------
+
+def test_legacy_factories_deprecated_but_working():
+    from repro.core.aggregators import make_aggregator
+    from repro.dist.robust import make_stacked_aggregator
+    from repro.kernels.ops import make_kernel_aggregator
+
+    x, s = _rand(8, 48, seed=3)
+    want = agg.resolve("ctma:cwmed", lam=0.25, backend="jnp")(x, s)
+    with pytest.warns(DeprecationWarning):
+        old = make_aggregator("ctma:cwmed", lam=0.25)(x, s)
+    np.testing.assert_allclose(np.asarray(old), np.asarray(want), atol=1e-6)
+
+    with pytest.warns(DeprecationWarning):
+        old_k = make_kernel_aggregator("ctma:cwmed", lam=0.25)(x, s)
+    np.testing.assert_allclose(np.asarray(old_k), np.asarray(want), atol=1e-4)
+
+    with pytest.warns(DeprecationWarning):
+        old_s = make_stacked_aggregator("ctma:cwmed", lam=0.25)(_as_tree(x), s)
+    np.testing.assert_allclose(np.asarray(_flat_result(old_s, 48)),
+                               np.asarray(want), atol=1e-5)
+
+
+D_DIM = 20
+WSTAR = jnp.full((D_DIM,), 3.0)
+
+
+def _quad_loss(w, batch):
+    return 0.5 * jnp.mean(jnp.sum((w - WSTAR - batch["x"]) ** 2, -1)) \
+        + 0.0 * jnp.sum(batch["y"])
+
+
+def _drive(cfg, loss_fn, params, steps=60, seed=0):
+    eng = AsyncByzantineEngine(cfg, loss_fn)
+    rng = np.random.default_rng(seed)
+    init = {"x": jnp.asarray(rng.normal(size=(cfg.m, 4, D_DIM)), jnp.float32),
+            "y": jnp.zeros((cfg.m, 4), jnp.int32)}
+    st = eng.init(params, init)
+    for _ in range(steps):
+        b = {"x": jnp.asarray(rng.normal(size=(4, D_DIM)), jnp.float32),
+             "y": jnp.zeros((4,), jnp.int32)}
+        st, m = eng.step(st, b)
+    return st, m
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_engine_agg_backend_backcompat(backend):
+    """EngineConfig(agg=..., agg_backend=...) keeps working through resolve."""
+    cfg = EngineConfig(m=5, byz=(4,), attack=AttackConfig("sign_flip"),
+                       agg="ctma:cwmed", lam=0.3, agg_backend=backend,
+                       opt=OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25))
+    st, _ = _drive(cfg, _quad_loss, jnp.zeros((D_DIM,)))
+    assert bool(jnp.all(jnp.isfinite(st.w)))
+
+
+def test_engine_spec_string_backend():
+    """A backend embedded in the spec string ("...@jnp") is honored."""
+    cfg = EngineConfig(m=5, byz=(), agg="ctma:cwmed@jnp", lam=0.2)
+    eng = AsyncByzantineEngine(cfg, _quad_loss)
+    assert eng.agg_fn.spec.backend == "jnp"
+    cfg_bad = cfg._replace(agg="ctma:cwmed", agg_backend="cuda")
+    with pytest.raises(KeyError):
+        AsyncByzantineEngine(cfg_bad, _quad_loss)
+
+
+# ---------------------------------------------------------------------------
+# pytree-native engine: tree state ≡ flat-vector shim, step for step
+# ---------------------------------------------------------------------------
+
+def test_engine_pytree_matches_flat_shim():
+    """The same quadratic driven with dict params must track the flat (d,)
+    run exactly: identical arrival randomness, stacked aggregation ≡ flat."""
+    def tree_loss(p, batch):
+        w = jnp.concatenate([p["a"].reshape(-1), p["b"].reshape(-1)])
+        return _quad_loss(w, batch)
+
+    cfg = EngineConfig(m=6, byz=(4, 5), attack=AttackConfig("sign_flip"),
+                       agg="ctma:cwmed", lam=0.35, agg_backend="jnp",
+                       opt=OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25))
+    st_flat, _ = _drive(cfg, _quad_loss, jnp.zeros((D_DIM,)), steps=80)
+    params = {"a": jnp.zeros((2, 5)), "b": jnp.zeros((D_DIM - 10,))}
+    st_tree, m = _drive(cfg, tree_loss, params, steps=80)
+
+    x_tree = jnp.concatenate([st_tree.x["a"].reshape(-1),
+                              st_tree.x["b"].reshape(-1)])
+    np.testing.assert_allclose(np.asarray(x_tree), np.asarray(st_flat.x),
+                               atol=1e-4, rtol=1e-4)
+    # stacked per-worker state: leaves carry the (m, ...) worker axis
+    assert st_tree.D["a"].shape == (6, 2, 5)
+    assert st_tree.Xq["b"].shape == (6, D_DIM - 10)
+    assert st_tree.S.shape == (6,)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_engine_pytree_converges_under_attack():
+    def tree_loss(p, batch):
+        w = jnp.concatenate([p["a"].reshape(-1), p["b"].reshape(-1)])
+        return _quad_loss(w, batch)
+
+    cfg = EngineConfig(m=9, byz=(7, 8), attack=AttackConfig("little"),
+                       agg="ctma:cwmed", lam=0.38, arrival="proportional",
+                       opt=OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25))
+    params = {"a": jnp.zeros((2, 5)), "b": jnp.zeros((D_DIM - 10,))}
+    st, _ = _drive(cfg, tree_loss, params, steps=400)
+    x = jnp.concatenate([st.x["a"].reshape(-1), st.x["b"].reshape(-1)])
+    assert float(jnp.linalg.norm(x - WSTAR)) < 0.8

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (bucketing, c_lambda, krum, make_aggregator, weighted_ctma,
+from repro.core import (bucketing, c_lambda, krum, weighted_ctma,
                         weighted_cwmed, weighted_cwtm, weighted_gm, weighted_mean,
                         weighted_median_1d, weighted_std)
 
@@ -109,11 +109,52 @@ def test_c_lambda_table():
 
 def test_registry_all_specs():
     x, s = _rand(8, 12)
-    from repro.core import AGGREGATOR_SPECS
+    from repro.agg import AGGREGATOR_SPECS, resolve
     for spec in AGGREGATOR_SPECS:
-        out = make_aggregator(spec, lam=0.25)(x, s)
+        out = resolve(spec, lam=0.25)(x, s)
         assert out.shape == (12,)
         assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# exact-tie regression: relative tolerance on the f32 cumsum
+# ---------------------------------------------------------------------------
+
+def test_weighted_median_tie_with_large_integer_weights():
+    """Regression: integer-valued float weights whose true prefix sum hits
+    exactly half the total, but whose float32 cumsum rounds past 2^24 — the
+    old atol=0 equality missed the tie and returned a single element instead
+    of averaging the two adjacent ones."""
+    s = jnp.asarray([7540897.0, 2505645.0, 7567152.0, 5637101.0,
+                     7469189.0, 1673657.0, 6360596.0, 7747353.0])
+    # first four weights sum to exactly half the total (verified in float64)
+    s64 = np.asarray(s, np.float64)
+    assert s64[:4].sum() == 0.5 * s64.sum()
+    # ... but the f32 cumsum misses exact equality
+    cw = np.cumsum(np.asarray(s, np.float32), dtype=np.float32)
+    assert not np.any(np.isclose(cw[:-1], 0.5 * cw[-1], rtol=0.0, atol=0.0))
+
+    v = jnp.arange(1.0, 9.0)  # ascending values: tie -> avg of v[3], v[4]
+    assert float(weighted_median_1d(v, s)) == pytest.approx(4.5)
+
+    x = jnp.stack([v, v[::-1] * 10.0], axis=1)  # (m, 2): per-column ties
+    out = weighted_cwmed(x, s)
+    np.testing.assert_allclose(np.asarray(out), [4.5, 45.0], rtol=1e-6)
+
+
+def test_weighted_median_tie_small_integer_weights_still_exact():
+    """Small integer weights (exact cumsum) keep the textbook tie behavior."""
+    v = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    s = jnp.asarray([2.0, 2.0, 1.0, 3.0])  # prefix [1,2] hits exactly half
+    assert float(weighted_median_1d(v, s)) == pytest.approx(2.5)
+
+
+def test_weighted_median_no_false_tie_near_half():
+    """The relative tolerance must not misfire when a prefix is merely CLOSE
+    to half: a gap of ~1e-3 relative is a regular median, not a tie."""
+    v = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    s = jnp.asarray([1.0, 0.9995, 1.0, 1.0])
+    assert float(weighted_median_1d(v, s)) == 3.0
 
 
 # ---------------------------------------------------------------------------

@@ -132,12 +132,12 @@ def test_wgm_trace_size_independent_of_iters():
 
 
 def test_kernel_aggregator_registry_matches_jnp():
-    from repro.core.aggregators import make_aggregator
+    from repro.agg import resolve
     x = jax.random.normal(jax.random.fold_in(KEY, 5), (8, 300))
     s = jax.random.uniform(jax.random.fold_in(KEY, 6), (8,), minval=0.2, maxval=2.0)
     for spec in ("mean", "cwmed", "gm", "ctma:cwmed", "ctma:gm"):
-        got = ops.make_kernel_aggregator(spec, lam=0.25)(x, s)
-        want = make_aggregator(spec, lam=0.25)(x, s)
+        got = resolve(spec, lam=0.25, backend="pallas")(x, s)
+        want = resolve(spec, lam=0.25, backend="jnp")(x, s)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    atol=1e-4, rtol=1e-4, err_msg=spec)
 

@@ -5,9 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import weighted_ctma, weighted_cwmed, weighted_gm, weighted_mean
-from repro.dist.robust import (make_stacked_aggregator, stacked_cwmed, stacked_ctma,
-                               stacked_gm, stacked_mean)
+from repro.core import (krum, weighted_ctma, weighted_cwmed, weighted_cwtm,
+                        weighted_gm, weighted_mean)
+from repro.dist.robust import (stacked_cwmed, stacked_ctma, stacked_cwtm,
+                               stacked_gm, stacked_krum, stacked_mean)
 
 
 def _stacked(m=7, seed=0):
@@ -35,6 +36,8 @@ def _flatten_result(res):
     (stacked_mean, weighted_mean, {}),
     (stacked_cwmed, weighted_cwmed, {}),
     (stacked_gm, weighted_gm, {"iters": 8}),
+    (stacked_cwtm, weighted_cwtm, {"lam": 0.2}),
+    (stacked_krum, krum, {"n_byz": 2}),
 ])
 def test_stacked_matches_flat(stacked_fn, flat_fn, kw):
     tree, s = _stacked()
@@ -62,7 +65,9 @@ def test_stacked_ctma_rejects_corrupt_group():
 
 
 def test_registry():
+    from repro.agg import resolve
     tree, s = _stacked()
-    for spec in ("mean", "cwmed", "gm", "ctma:cwmed", "ctma:gm"):
-        out = make_stacked_aggregator(spec, lam=0.25)(tree, s)
+    for spec in ("mean", "cwmed", "gm", "cwtm", "krum", "zeno",
+                 "ctma:cwmed", "ctma:gm", "bucketing:cwmed"):
+        out = resolve(spec, lam=0.25)(tree, s)
         assert jax.tree_util.tree_structure(out) == jax.tree_util.tree_structure(tree)
