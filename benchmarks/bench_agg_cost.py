@@ -6,8 +6,18 @@ TPU) against the jnp oracles, including the fused vs unfused ω-CTMA pipeline
 — the fusion removes one full HBM pass over the (m, d) matrix (3 -> 2), so
 ``aggpallas_ctma:cwmed_fused_speedup_*`` rows track the bandwidth win across
 PRs via BENCH_agg.json (written by benchmarks/run.py).
+
+``run_hier`` (the ``agghier`` bench in benchmarks/run.py) times the
+hierarchical cross-pod path (dist/hierarchy.py) against the single-host
+stacked path on a 2-pod host mesh and records its collective-bytes / HBM
+accounting from the compiled HLO: all-gather must stay 0 — the distance
+reductions communicate only (m,)-sized partials over the pod axis. Needs
+multiple host devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+in a fresh process); with a single device it emits nothing.
 """
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -83,5 +93,72 @@ def run(full: bool = False, smoke: bool = False):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Hierarchical cross-pod path (dist/hierarchy.py) — the ``agghier`` bench
+# ---------------------------------------------------------------------------
+
+HIER_GRID = [(9, 10_000), (17, 100_000)]
+HIER_SPECS = (("ctma:cwmed", {"lam": 0.25}), ("gm", {"iters": 8}),
+              ("krum", {"n_byz": 2}))
+
+
+def _hier_tree(key, m, d):
+    """(m, d) split into a two-leaf stacked tree with pod-divisible dims."""
+    x, s = _data(key, m, d)
+    return {"a": x[:, : d // 2], "b": x[:, d // 2:]}, s
+
+
+def run_hier(full: bool = False, smoke: bool = False):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.dist.context import mesh_context
+    from repro.dist.sharding import hier_momentum_sharding
+    # NOT from repro.launch.dryrun — importing it would force the 512-device
+    # placeholder platform via XLA_FLAGS before jax initializes
+    from repro.utils import collective_bytes
+
+    n_dev = jax.device_count()
+    if n_dev < 4:
+        print("# agghier: skipped — needs a multi-device host platform "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+              file=sys.stderr)
+        return []
+    mesh = jax.make_mesh((2, n_dev // 2), ("pod", "data"))
+    rows = []
+    key = jax.random.PRNGKey(1)
+    iters, warmup = (2, 1) if smoke else (5, 2)
+    grid = HIER_GRID[:1] if smoke else HIER_GRID
+    specs = HIER_SPECS[:1] if smoke else HIER_SPECS
+    for m, d in grid:
+        tree, s = _hier_tree(key, m, d)
+        for spec, kw in specs:
+            stacked = jax.jit(resolve(f"{spec}@jnp", **kw))
+            us_s = timeit_median(lambda: stacked(tree, s), iters=iters,
+                                 warmup=warmup) * 1e6
+            hier = resolve(spec, **kw)
+            with mesh_context(mesh):
+                jf = jax.jit(hier, in_shardings=(
+                    hier_momentum_sharding(mesh, tree), NamedSharding(mesh, P())))
+                # time the lowered executable directly — calling jf would
+                # re-trace and re-compile (lower() does not seed jit's cache)
+                compiled = jf.lower(tree, s).compile()
+                us_h = timeit_median(lambda: compiled(tree, s), iters=iters,
+                                     warmup=warmup) * 1e6
+            coll = collective_bytes(compiled.as_text())
+            try:
+                ca = compiled.cost_analysis()
+                ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+                hbm = int(float(ca.get("bytes accessed", 0.0)))
+            except Exception:  # pragma: no cover
+                hbm = 0
+            rows.append(fmt_row(
+                f"agghier_{spec}_m{m}_d{d}", us_h,
+                f"vs_stacked_ratio={us_s / max(us_h, 1e-9):.3f};"
+                f"allgather_B={coll['all-gather']};"
+                f"allreduce_B={coll['all-reduce']};hbm_B={hbm};n_pod=2"))
+            assert coll["all-gather"] == 0, (spec, coll)
+    return rows
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(run() + run_hier()))

@@ -11,13 +11,16 @@ experimental panels:
     thm42_*     Thm. 4.2  1/√T excess-loss decay under attack
     aggcost_*   Table 1 / Remark 4.1 aggregator cost scaling
     aggpallas_* Pallas kernel paths vs jnp oracles (fused vs unfused CTMA)
+    agghier_*   hierarchical cross-pod path vs single-host stacked, with
+                collective-bytes/HBM accounting (needs a multi-device host —
+                run under XLA_FLAGS=--xla_force_host_platform_device_count=8)
     kernel_*    Pallas kernel timings (interpret mode)
     roofline_*  §Roofline terms from the dry-run artifacts
 
 Aggregation rows additionally persist to ``BENCH_agg.json`` at the repo root
 so successive PRs accumulate a perf trajectory (``--smoke`` runs the reduced
-aggcost grid only — the CI fast path — and still records the fused-CTMA
-speedup at the acceptance shape m=17, d=100k).
+aggcost + agghier grids only — the CI fast path — and still records the
+fused-CTMA speedup at the acceptance shape m=17, d=100k).
 """
 from __future__ import annotations
 
@@ -30,6 +33,7 @@ from pathlib import Path
 
 BENCHES = {
     "aggcost": "benchmarks.bench_agg_cost",
+    "agghier": "benchmarks.bench_agg_cost:run_hier",
     "fig2": "benchmarks.bench_weighted_vs_unweighted",
     "fig3": "benchmarks.bench_ctma_effect",
     "fig4": "benchmarks.bench_optimizers",
@@ -49,7 +53,7 @@ def _parse_row(row: str) -> dict:
 def persist_agg(rows: list[str]) -> None:
     """Append this run's aggregation rows to BENCH_agg.json (perf trajectory)."""
     agg_rows = [_parse_row(r) for r in rows
-                if r.startswith(("aggcost_", "aggpallas_"))]
+                if r.startswith(("aggcost_", "aggpallas_", "agghier_"))]
     if not agg_rows:
         return
     history = []
@@ -67,7 +71,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI subset: reduced aggcost grid only")
+                    help="fast CI subset: reduced aggcost + agghier grids")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
@@ -75,20 +79,21 @@ def main() -> None:
     if unknown:
         raise SystemExit(f"unknown bench name(s) {unknown}; choose from {list(BENCHES)}")
     if args.smoke and not args.only:
-        names = ["aggcost"]
+        names = ["aggcost", "agghier"]
 
     print("name,us_per_call,derived")
     failures = 0
     all_rows: list[str] = []
     for name in names:
-        mod_name = BENCHES[name]
+        mod_name, _, attr = BENCHES[name].partition(":")
         t0 = time.time()
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            if "smoke" in inspect.signature(mod.run).parameters:
-                rows = mod.run(full=args.full, smoke=args.smoke)
+            fn = getattr(mod, attr or "run")
+            if "smoke" in inspect.signature(fn).parameters:
+                rows = fn(full=args.full, smoke=args.smoke)
             else:  # benches that predate the smoke flag
-                rows = mod.run(full=args.full)
+                rows = fn(full=args.full)
             for row in rows:
                 print(row, flush=True)
             all_rows.extend(rows)

@@ -17,6 +17,7 @@ from .spec import AggregatorSpec, BACKENDS, parse  # noqa: F401
 from .registry import (  # noqa: F401
     AGGREGATOR_SPECS,
     Rule,
+    has_hier,
     register,
     resolve,
     rules,

@@ -10,8 +10,13 @@ dispatching per input layout:
     flat (m, d) matrix   backend ``jnp``    -> core.aggregators oracles
                          backend ``pallas`` -> kernels.ops fused pipelines
                          backend ``auto``   -> pallas on TPU, jnp elsewhere
-    stacked pytree       always the leaf-wise ``dist.robust`` path with its
-                         single GLOBAL distance pass (no O(m·d) flatten copy)
+    stacked pytree       the leaf-wise ``dist.robust`` path with its single
+                         GLOBAL distance pass (no O(m·d) flatten copy); under
+                         ``auto``/``hier`` it is additionally mesh-aware —
+                         traced inside a multi-pod ``mesh_context`` the rule
+                         runs the ``dist.hierarchy`` cross-pod variant
+                         (per-pod partial distance sums + an (m,)-sized psum
+                         over the ``pod`` axis; no momentum gather)
 
 A rule without a native implementation for some path degrades gracefully:
 missing pallas -> the jnp oracle; missing stacked -> a flatten/unflatten
@@ -56,6 +61,12 @@ def _stk():
     return robust
 
 
+def _hr():
+    """Hierarchical cross-pod backends, imported lazily like ``_stk``."""
+    from repro.dist import hierarchy
+    return hierarchy
+
+
 Builder = Callable[[AggregatorSpec], Callable]
 
 
@@ -63,6 +74,7 @@ class Rule(NamedTuple):
     flat: Builder                      # jnp oracle — always present
     pallas: Optional[Builder] = None   # fused kernel path (None -> flat)
     stacked: Optional[Builder] = None  # leaf-wise path (None -> flatten fallback)
+    hier: Optional[Builder] = None     # cross-pod shard_map path (None -> stacked)
     composes: bool = False             # accepts a ':base' inner rule
     doc: str = ""
 
@@ -71,14 +83,29 @@ _RULES: Dict[str, Rule] = {}
 
 
 def register(name: str, flat: Builder, *, pallas: Optional[Builder] = None,
-             stacked: Optional[Builder] = None, composes: bool = False,
-             doc: str = "") -> None:
+             stacked: Optional[Builder] = None, hier: Optional[Builder] = None,
+             composes: bool = False, doc: str = "") -> None:
     """Add (or override) a rule in the global registry."""
-    _RULES[name.lower()] = Rule(flat, pallas, stacked, composes, doc)
+    _RULES[name.lower()] = Rule(flat, pallas, stacked, hier, composes, doc)
 
 
 def rules() -> Dict[str, Rule]:
     return dict(_RULES)
+
+
+def has_hier(spec: SpecLike, **kw) -> bool:
+    """Whether ``spec`` resolves to a rule WITH a hierarchical cross-pod path
+    (its stacked branch upgrades under a multi-pod ``mesh_context``). The
+    launch layer keys the pod-sharded momentum layout and the dry-run's
+    ``agg_hier`` artifact flag on this — a rule that would silently fall back
+    to the single-host stacked path must not claim the hierarchical layout."""
+    sp = parse(spec, **kw)
+    if sp.backend not in ("auto", "hier"):
+        return False  # an explicit @jnp/@pallas pin never upgrades
+    rule = _RULES.get(sp.rule)
+    if rule is None or rule.hier is None:
+        return False
+    return rule.hier(sp) is not None
 
 
 def resolve(spec: SpecLike, **kw) -> Callable:
@@ -111,16 +138,40 @@ def resolve(spec: SpecLike, **kw) -> Callable:
     # users never import the dist layer, and a stacked builder that declines
     # (returns None — e.g. ctma over a base with no leaf-wise path) falls
     # back to the flatten adapter instead of handing out a broken callable.
+    # Under ``auto``/``hier`` a rule with a hier builder gets the mesh-aware
+    # dist.hierarchy wrapper, which itself falls back to the single-host
+    # stacked path whenever no multi-pod mesh_context is active at trace time.
+    # An EXPLICIT ``@hier`` pins that wrapper, so it must fail loudly (here,
+    # eagerly) rather than silently hand back a path that would gather the
+    # stacked buffers across pods.
     cache: dict = {}
+    if sp.backend == "hier":
+        hfn = rule.hier(sp) if rule.hier is not None else None
+        if hfn is None:
+            raise ValueError(
+                f"spec {sp.canonical!r}: rule {sp.rule!r} has no hierarchical "
+                f"cross-pod path for these parameters; use backend 'auto' for "
+                f"graceful single-host fallback, or a rule registered with a "
+                f"hier builder")
+        cache["hier"] = hfn
 
     def _stacked_fn():
         if "fn" not in cache:
             fn = rule.stacked(sp) if rule.stacked is not None else None
-            cache["fn"] = fn if fn is not None else _flatten_fallback(flat_fn)
+            fn = fn if fn is not None else _flatten_fallback(flat_fn)
+            hfn = cache.get("hier")
+            if hfn is None and sp.backend == "auto" and rule.hier is not None:
+                hfn = rule.hier(sp)
+            if hfn is not None:
+                fn = hfn
+            cache["fn"] = fn
         return cache["fn"]
 
     def agg(x, s=None):
-        if _is_flat_matrix(x):
+        # A pinned ``@hier`` takes the hierarchical wrapper even for a flat
+        # (m, d) matrix — the single-leaf stacked case, same values — so the
+        # no-cross-pod-gather guarantee is never silently dropped.
+        if _is_flat_matrix(x) and sp.backend != "hier":
             return flat_fn(x, s)
         return _stacked_fn()(x, s)
 
@@ -238,6 +289,25 @@ def _stacked_ctma(sp: AggregatorSpec) -> Optional[Callable]:
     return partial(stk.stacked_ctma, lam=sp.lam, base=base, **mine)
 
 
+def _hier_ctma(sp: AggregatorSpec) -> Optional[Callable]:
+    hr = _hr()
+    base = sp.base or "cwmed"
+    if base not in hr._BASE_BODIES:
+        return None  # unsupported anchor: resolve falls back to plain stacked
+    # Route the anchor's own parameters exactly like the stacked path does
+    # (gm: iters/eps; cwtm: the shared λ); any extras this path does not
+    # recognize mean PR-2 stacked semantics must win — decline.
+    extras = dict(sp.kwargs)
+    base_kw = {}
+    if base == "gm":
+        base_kw = {"iters": sp.iters, "eps": extras.pop("eps", 1e-8)}
+    elif base == "cwtm":
+        base_kw = {"lam": _cwtm_lam(sp)}
+    if extras:
+        return None
+    return partial(hr.hier_ctma, lam=sp.lam, base=base, base_kw=base_kw)
+
+
 def _flat_bucketing(sp: AggregatorSpec) -> Callable:
     mine, rest = _split_kwargs(sp.kwargs, _flatagg.bucketing)
     for reserved in ("x", "s", "inner"):  # composition comes from the spec
@@ -252,6 +322,7 @@ def _register_builtins() -> None:
         flat=lambda sp: _flatagg.weighted_mean,
         pallas=lambda sp: partial(_ops().wmean, interpret=_interp(sp)),
         stacked=lambda sp: _stk().stacked_mean,
+        hier=lambda sp: _hr().hier_mean,
         doc="weighted mean — non-robust baseline",
     )
     register(
@@ -259,6 +330,7 @@ def _register_builtins() -> None:
         flat=lambda sp: _flatagg.weighted_cwmed,
         pallas=lambda sp: partial(_ops().wcwmed, interpret=_interp(sp)),
         stacked=lambda sp: _stk().stacked_cwmed,
+        hier=lambda sp: _hr().hier_cwmed,
         doc="ω-CWMed — weighted coordinate-wise median (Lemma C.3)",
     )
     register(
@@ -269,18 +341,21 @@ def _register_builtins() -> None:
                                   interpret=_interp(sp), **sp.kwargs),
         stacked=lambda sp: partial(_stk().stacked_gm, iters=sp.iters,
                                    **sp.kwargs),
+        hier=lambda sp: partial(_hr().hier_gm, iters=sp.iters, **sp.kwargs),
         doc="ω-GM / ω-RFA — weighted geometric median (Lemma C.1)",
     )
     register(
         "cwtm",
         flat=lambda sp: partial(_flatagg.weighted_cwtm, lam=_cwtm_lam(sp)),
         stacked=lambda sp: partial(_stk().stacked_cwtm, lam=_cwtm_lam(sp)),
+        hier=lambda sp: partial(_hr().hier_cwtm, lam=_cwtm_lam(sp)),
         doc="ω-CWTM — weighted coordinate-wise trimmed mean",
     )
     register(
         "krum",
         flat=lambda sp: partial(_flatagg.krum, **sp.kwargs),
         stacked=lambda sp: partial(_stk().stacked_krum, **sp.kwargs),
+        hier=lambda sp: partial(_hr().hier_krum, **sp.kwargs),
         doc="Krum (Blanchard et al. 2017) — unweighted baseline",
     )
     register(
@@ -288,6 +363,7 @@ def _register_builtins() -> None:
         flat=_flat_ctma,
         pallas=_pallas_ctma,
         stacked=_stacked_ctma,
+        hier=_hier_ctma,
         composes=True,
         doc="ω-CTMA (Alg. 1) — centered trimmed meta-aggregator over :base",
     )

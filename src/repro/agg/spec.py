@@ -10,13 +10,22 @@ One string names one aggregation pipeline:
     base     — meta-rule composition: the inner rule a meta-aggregator wraps
                (``ctma:gm`` anchors ω-CTMA at the weighted geometric median;
                ``bucketing:cwmed`` aggregates bucket means with ω-CWMed).
-    backend  — flat-matrix execution engine: ``jnp`` (pure-XLA oracle),
-               ``pallas`` (fused kernels; interpret mode off-TPU), or ``auto``
-               (default: pallas on TPU, jnp elsewhere). Stacked-pytree inputs
-               always take the leaf-wise path with its single global distance
-               pass, regardless of backend.
+    backend  — execution engine. For flat ``(m, d)`` inputs: ``jnp``
+               (pure-XLA oracle), ``pallas`` (fused kernels; interpret mode
+               off-TPU), or ``auto`` (default: pallas on TPU, jnp elsewhere).
+               Stacked-pytree inputs take the leaf-wise path with its single
+               global distance pass; under ``auto`` or ``hier`` that path is
+               additionally mesh-aware — lowered inside a multi-pod
+               ``mesh_context`` it becomes the hierarchical cross-pod variant
+               (per-pod partial distance sums + an (m,)-sized ``lax.psum``
+               over the ``pod`` axis; dist/hierarchy.py). ``hier`` pins the
+               hierarchical wrapper — resolving it for a rule (or meta-rule
+               anchor) without a cross-pod path raises rather than silently
+               handing back a buffer-gathering one; ``jnp``/``pallas`` pin
+               the single-host stacked path.
 
-Examples: ``"cwmed"``, ``"ctma:gm@pallas"``, ``"bucketing:cwmed@jnp"``.
+Examples: ``"cwmed"``, ``"ctma:gm@pallas"``, ``"ctma:cwmed@hier"``,
+``"bucketing:cwmed@jnp"``.
 
 Numeric parameters (``lam``, ``iters``, rule-specific extras like Krum's
 ``n_byz`` or Zeno's ``rho``) are carried on the spec, not in the string —
@@ -26,7 +35,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional, Tuple, Union
 
-BACKENDS = ("auto", "jnp", "pallas")
+BACKENDS = ("auto", "jnp", "pallas", "hier")
 
 DEFAULT_GM_ITERS = 32
 
@@ -35,7 +44,7 @@ class AggregatorSpec(NamedTuple):
     """Parsed, hashable description of one aggregation pipeline."""
     rule: str                               # registered rule name
     base: Optional[str] = None              # inner rule for meta-aggregators
-    backend: str = "auto"                   # auto | jnp | pallas (flat inputs)
+    backend: str = "auto"                   # auto | jnp | pallas | hier
     lam: float = 0.0                        # λ: trimmed weight mass / band
     iters: int = DEFAULT_GM_ITERS           # Weiszfeld iterations (gm paths)
     interpret: Optional[bool] = None        # pallas interpret override (None=auto)

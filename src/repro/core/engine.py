@@ -214,11 +214,18 @@ class AsyncByzantineEngine:
         else:  # sgd
             d_honest = g
 
-        atk = byzantine_vector(cfg.attack, state.D, ~self.byz_mask, state.S, d_honest)
+        # Omniscient attacks read the POST-update buffers: worker i's count is
+        # incremented and its honest momentum written before little/empire
+        # compute their weighted mean/std and z_max — matching the synchronous
+        # group step (dist/steps.py), which attacks counts_new/D_new. (The
+        # Byzantine row itself is masked out of the honest statistics, but the
+        # weight masses entering little's z_max must track update counts.)
+        S = state.S.at[i].set(s_new)
+        D_upd = _set_row(state.D, i, d_honest)
+        atk = byzantine_vector(cfg.attack, D_upd, ~self.byz_mask, S, d_honest)
         d_sent = _tmap(lambda a, h: jnp.where(is_byz, a, h), atk, d_honest)
 
-        D = _set_row(state.D, i, d_sent)
-        S = state.S.at[i].set(s_new)
+        D = _set_row(D_upd, i, d_sent)
         Xq = _set_row(state.Xq, i, query)
 
         # --- server update (lines 4-7) --------------------------------------

@@ -30,3 +30,15 @@ def mesh_context(mesh) -> Iterator[None]:
 def current_mesh() -> Optional[object]:
     """The innermost active mesh, or None outside any ``mesh_context``."""
     return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def current_axis_size(name: str) -> int:
+    """Size of a named axis on the active mesh (1 when absent or no mesh).
+
+    The hierarchical aggregation layer (dist/hierarchy.py) dispatches on
+    ``current_axis_size('pod')`` at trace time: > 1 means the stacked momenta
+    are pod-sharded and the cross-pod distance psum path must be used."""
+    mesh = current_mesh()
+    if mesh is None or name not in getattr(mesh, "axis_names", ()):
+        return 1
+    return int(mesh.shape[name])

@@ -52,17 +52,22 @@ def _flat2(leaf: Array) -> Array:
     return leaf.reshape(leaf.shape[0], -1)
 
 
-def stacked_sqdist(tree: Pytree, y: Pytree) -> Array:
+def stacked_sqdist(tree: Pytree, y: Pytree,
+                   scale: Optional[Pytree] = None) -> Array:
     """Global squared distances ‖x_i - y‖² summed across ALL leaves -> (m,).
 
-    This is THE single distance pass shared by stacked_gm and stacked_ctma:
-    each leaf is read once, partial sums are (m,) scalars."""
-    def leaf_part(x, yl):
+    This is THE single distance pass shared by stacked_gm and stacked_ctma —
+    and, applied to local shards, by the hierarchical path (dist/hierarchy.py),
+    whose optional per-leaf ``scale`` pytree makes its cross-pod psum count
+    replicated leaves exactly once. Each leaf is read once, partial sums are
+    (m,) scalars."""
+    def leaf_part(x, yl, f=1.0):
         diff = _flat2(x).astype(jnp.float32) - yl.reshape(1, -1).astype(jnp.float32)
-        return jnp.sum(jnp.square(diff), axis=1)
+        return f * jnp.sum(jnp.square(diff), axis=1)
 
-    parts = jax.tree_util.tree_leaves(_tmap(leaf_part, tree, y))
-    return sum(parts)
+    mapped = (_tmap(leaf_part, tree, y) if scale is None
+              else _tmap(leaf_part, tree, y, scale))
+    return sum(jax.tree_util.tree_leaves(mapped))
 
 
 def _combine(tree: Pytree, coef: Array, denom) -> Pytree:
@@ -135,29 +140,40 @@ def stacked_cwtm(tree: Pytree, s: Optional[Array] = None, *,
     return _tmap(leaf, tree)
 
 
-def stacked_pairwise_sqdist(tree: Pytree) -> Array:
-    """Global (m, m) pairwise squared distances in ONE pass over the tree.
+def stacked_pairwise_sqdist(tree: Pytree,
+                            scale: Optional[Pytree] = None) -> Array:
+    """Global (m, m) pairwise squared distances in ONE pass over the tree
+    (``scale`` as in :func:`stacked_sqdist` — the hierarchical path's per-leaf
+    psum weights).
 
     Differences are formed directly (like the flat ``core.aggregators.krum``)
     rather than via the Gram identity ‖x_i‖² + ‖x_j‖² − 2⟨x_i,x_j⟩, whose
     float32 cancellation zeroes out small distances between large-norm rows —
     exactly the clustered-honest-momenta regime Krum ranks on."""
-    def part(x):
+    def part(x, f=1.0):
         xf = _flat2(x).astype(jnp.float32)
-        return jnp.sum(jnp.square(xf[:, None, :] - xf[None, :, :]), axis=-1)
+        return f * jnp.sum(jnp.square(xf[:, None, :] - xf[None, :, :]), axis=-1)
 
-    return sum(jax.tree_util.tree_leaves(_tmap(part, tree)))
+    mapped = _tmap(part, tree) if scale is None else _tmap(part, tree, scale)
+    return sum(jax.tree_util.tree_leaves(mapped))
+
+
+def krum_select(d2: Array, n_byz: int = 1) -> Array:
+    """Krum winner index from an (m, m) pairwise squared-distance matrix —
+    shared by the stacked path here and the hierarchical path
+    (dist/hierarchy.py), so the scoring can never drift between the two."""
+    m = d2.shape[0]
+    d2 = jnp.where(jnp.eye(m, dtype=bool), jnp.inf, d2)
+    k = max(m - n_byz - 2, 1)
+    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
+    return jnp.argmin(scores)
 
 
 def stacked_krum(tree: Pytree, s: Optional[Array] = None, *,
                  n_byz: int = 1) -> Pytree:
     """Krum on a stacked tree: one global pairwise-distance pass, then the
     winning row sliced out leaf-wise (ignores weights — classical rule)."""
-    m = _lead(tree)
-    d2 = jnp.where(jnp.eye(m, dtype=bool), jnp.inf, stacked_pairwise_sqdist(tree))
-    k = max(m - n_byz - 2, 1)
-    scores = jnp.sum(jnp.sort(d2, axis=1)[:, :k], axis=1)
-    i = jnp.argmin(scores)
+    i = krum_select(stacked_pairwise_sqdist(tree), n_byz)
     return _tmap(lambda x: x[i], tree)
 
 

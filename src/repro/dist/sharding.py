@@ -92,6 +92,19 @@ def param_sharding(cfg: ModelConfig, mesh, tree: Pytree, mode: str = "train"
     return jax.tree_util.tree_map_with_path(leaf, tree)
 
 
+def hier_momentum_sharding(mesh, tree: Pytree) -> Pytree:
+    """Pod-sharded layout for stacked ``(G, ...)`` momentum buffers on a
+    multi-pod mesh: parameter dims over ``pod`` (+ ``model`` when a second
+    dim divides), leading group axis unsharded. This is EXACTLY the block
+    layout ``dist.hierarchy``'s shard_map expects, so the robust train step's
+    hierarchical distance pass reads the buffers in place — resharding (and
+    any cross-pod momentum gather) never appears in the lowered HLO."""
+    from repro.dist.hierarchy import momentum_pspec
+
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, momentum_pspec(tuple(l.shape), mesh)), tree)
+
+
 def batch_sharding(cfg: ModelConfig, mesh, tree: Pytree) -> Pytree:
     """Shard every batch leaf's leading dim over the data-parallel axes."""
     dp = dp_axes(mesh)

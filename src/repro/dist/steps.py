@@ -8,8 +8,11 @@ for ``jax.jit`` — callers add shardings (launch/specs.py) and donation
 robust step keeps per-group corrected momenta as a STACKED pytree — leaves
 carry a leading ``(n_groups, ...)`` axis — and aggregates through the unified
 ``repro.agg`` API, whose stacked branch (dist/robust.py) runs the CTMA/GM
-distance pass once globally across leaves with no O(m·d) flatten copy (see
-dist/README.md for the HBM accounting).
+distance pass once globally across leaves with no O(m·d) flatten copy; traced
+under a multi-pod ``mesh_context`` that branch auto-upgrades to the
+hierarchical cross-pod path (dist/hierarchy.py: pod-sharded momenta, distance
+reductions as (m,)-sized psums over the pod axis — see dist/README.md for the
+HBM + ICI accounting).
 
 Byzantine group behaviors follow core.attacks (Appendix D), adapted to the
 group setting: label_flip poisons a group's labels before its gradients;
@@ -96,7 +99,12 @@ def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig):
 # ---------------------------------------------------------------------------
 
 def _group_sizes(rcfg: RobustDPConfig, B: int) -> list[int]:
-    """Static per-group row counts summing to B (Remark 3.1 heterogeneity)."""
+    """Static per-group row counts summing to B (Remark 3.1 heterogeneity).
+
+    Relative ``group_sizes`` are apportioned by largest remainder with a
+    ≥1-row floor. (The previous ``sizes[-1] += B - sum(sizes)`` rescaling
+    could drive the last group to zero or negative rows under skewed ratios —
+    an empty slice whose loss is 0/0 = NaN.)"""
     G = rcfg.n_groups
     if rcfg.group_sizes is None:
         base, extra = divmod(B, G)
@@ -104,11 +112,29 @@ def _group_sizes(rcfg: RobustDPConfig, B: int) -> list[int]:
         return [base + (1 if i < extra else 0) for i in range(G)]
     gs = list(rcfg.group_sizes)
     assert len(gs) == G
+    assert min(gs) >= 1, f"group_sizes ratios must be >= 1, got {gs}"
+    assert B >= G, f"batch {B} too small for {G} groups with >=1 row each"
     total = sum(gs)
     if total == B:
         return gs
-    sizes = [max(1, (B * g) // total) for g in gs]
-    sizes[-1] += B - sum(sizes)
+    quota = [B * g / total for g in gs]
+    sizes = [max(1, int(q)) for q in quota]
+    deficit = B - sum(sizes)
+    if deficit > 0:       # hand out remaining rows by largest fractional part
+        order = sorted(range(G), key=lambda i: quota[i] - int(quota[i]),
+                       reverse=True)
+        for k in range(deficit):
+            sizes[order[k % G]] += 1
+    elif deficit < 0:     # the >=1 floor over-allocated: shrink the groups
+        order = sorted(range(G), key=lambda i: quota[i] - int(quota[i]))
+        k = 0
+        while deficit < 0:
+            i = order[k % G]
+            if sizes[i] > 1:
+                sizes[i] -= 1
+                deficit += 1
+            k += 1
+    assert sum(sizes) == B and min(sizes) >= 1, (sizes, B)
     return sizes
 
 
@@ -249,7 +275,9 @@ def make_robust_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
         if opt_cfg.name == "mu2":
             new_opt = server_step(opt_cfg, opt, d_hat)
         else:
-            w = _tmap(lambda wl, dl: wl - opt_cfg.lr * dl.astype(wl.dtype),
+            # same decoupled weight decay as opt_update/server_step
+            w = _tmap(lambda wl, dl: (wl - opt_cfg.lr * dl.astype(wl.dtype)
+                                      - opt_cfg.lr * opt_cfg.weight_decay * wl),
                       opt.w, d_hat)
             w = _project(opt_cfg, w, opt.anchor)
             new_opt = OptState(w=w, x=w, x_prev=None, d=opt.d, t=opt.t + 1,

@@ -76,7 +76,8 @@ def _strip_axes(spec: P, banned: set) -> P:
     return P(*(clean(e) for e in spec))
 
 
-def train_state_sharding(cfg: ModelConfig, mesh, state_shape: TrainState) -> TrainState:
+def train_state_sharding(cfg: ModelConfig, mesh, state_shape: TrainState,
+                         robust: Optional[RobustDPConfig] = None) -> TrainState:
     pshard = param_sharding(cfg, mesh, state_shape.opt.w)
     scalar = NamedSharding(mesh, P())
 
@@ -96,11 +97,24 @@ def train_state_sharding(cfg: ModelConfig, mesh, state_shape: TrainState) -> Tra
     D = None
     counts = None
     if state_shape.D is not None:
-        dp = dp_axes(mesh)
-        banned = set(dp)
-        base = param_sharding(cfg, mesh, state_shape.opt.w)
-        D = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, P(dp, *_strip_axes(s.spec, banned))), base)
+        from repro.agg import has_hier
+        from repro.dist.hierarchy import pod_count
+        if (pod_count(mesh) > 1 and robust is not None
+                and has_hier(robust.agg, lam=robust.lam)):
+            # multi-pod AND the rule actually takes the hierarchical path
+            # (same predicate as the aggregation dispatch): pod-sharded
+            # parameter dims, group axis local — the layout
+            # dist/hierarchy.py's cross-pod distance psum reads in place
+            # (no momentum gather over the pod axis). Rules without a hier
+            # path keep the dp layout their stacked fallback expects.
+            from repro.dist.sharding import hier_momentum_sharding
+            D = hier_momentum_sharding(mesh, state_shape.D)
+        else:
+            dp = dp_axes(mesh)
+            banned = set(dp)
+            D = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, P(dp, *_strip_axes(s.spec, banned))),
+                pshard)
         counts = NamedSharding(mesh, P())
     return TrainState(opt=opt, D=D, counts=counts)
 
@@ -127,7 +141,7 @@ def make_all_specs(cfg: ModelConfig, mesh, shape: InputShape, opt_cfg: OptConfig
     """
     if shape.mode == "train":
         state_shape = train_state_specs(cfg, opt_cfg, robust)
-        state_shard = train_state_sharding(cfg, mesh, state_shape)
+        state_shard = train_state_sharding(cfg, mesh, state_shape, robust)
         b_shape = batch_specs(cfg, shape)
         b_shard = batch_sharding(cfg, mesh, b_shape)
         out = (state_shard, NamedSharding(mesh, P())) if with_out else None

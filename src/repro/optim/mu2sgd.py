@@ -134,14 +134,19 @@ def opt_update(cfg: OptConfig, state: OptState, g: Pytree,
                g_tilde: Optional[Pytree] = None, lr_scale=1.0) -> OptState:
     """Single-worker (synchronous, m=1) update for all supported optimizers."""
     t_next = state.t + 1
+    # cfg.weight_decay applies to EVERY optimizer, with the same decoupled
+    # -lr·wd·w term server_step uses (the sgd/momentum branches used to drop
+    # it silently, so sweeps comparing optimizers at wd>0 were inconsistent).
     if cfg.name == "sgd":
-        w = _tmap(lambda wl, gl: wl - cfg.lr * lr_scale * gl.astype(wl.dtype), state.w, g)
+        w = _tmap(lambda wl, gl: (wl - cfg.lr * lr_scale * gl.astype(wl.dtype)
+                                  - cfg.lr * cfg.weight_decay * wl), state.w, g)
         w = _project(cfg, w, state.anchor)
         return OptState(w=w, x=w, x_prev=None, d=state.d, t=t_next, anchor=state.anchor)
     if cfg.name == "momentum":
         beta = 0.9 if cfg.beta is None else cfg.beta
         d = _tmap(lambda dl, gl: beta * dl + (1.0 - beta) * gl, state.d, g)
-        w = _tmap(lambda wl, dl: wl - cfg.lr * lr_scale * dl.astype(wl.dtype), state.w, d)
+        w = _tmap(lambda wl, dl: (wl - cfg.lr * lr_scale * dl.astype(wl.dtype)
+                                  - cfg.lr * cfg.weight_decay * wl), state.w, d)
         w = _project(cfg, w, state.anchor)
         return OptState(w=w, x=w, x_prev=None, d=d, t=t_next, anchor=state.anchor)
     if cfg.name == "mu2":

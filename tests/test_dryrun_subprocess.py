@@ -64,3 +64,27 @@ def test_collective_parser():
     assert out["all-gather"] == 16 * 1024 * 2
     assert out["all-reduce"] == 128 * 4 * 2  # counted for both ring phases
     assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+def test_collective_parser_async_ops():
+    """Async HLO pairs must count ONCE, with the same bytes as the sync
+    lowering: only the -start op's RESULT tuple element is counted (the tuple
+    repeats the operand shape), and the -done op is rejected — it must not
+    register as a second all-reduce or a spurious all-gather."""
+    from repro.utils import collective_bytes
+    hlo = """
+  %ar = (f32[8]{0}, f32[8]{0}) all-reduce-start(f32[8]{0} %x), to_apply=%sum
+  %ard = f32[8]{0} all-reduce-done((f32[8]{0}, f32[8]{0}) %ar)
+  %ags = (f32[8]{0}, f32[16]{0}) all-gather-start(f32[8]{0} %y), replica_groups={}
+  %agd = f32[16]{0} all-gather-done((f32[8]{0}, f32[16]{0}) %ags)
+  %cps = (f32[32]{0}, f32[32]{0}, u32[], u32[]) collective-permute-start(f32[32]{0} %z)
+  %var = ((f32[64]{0}, f32[4]{0}), (f32[64]{0}, f32[4]{0})) all-to-all-start(f32[64]{0} %p, f32[4]{0} %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 4 * 2   # results half only, x2 ring
+    assert out["all-gather"] == 16 * 4      # the result, not the operand
+    assert out["collective-permute"] == 32 * 4  # u32[] context scalars skipped
+    assert out["all-to-all"] == (64 + 4) * 4    # variadic: BOTH results count
+    # an op NAME referenced as an operand (%-less print style) is not an op
+    assert collective_bytes("  add.9 = f32[8]{0} add(y.2, all-reduce.3)") \
+        == {k: 0 for k in list(out) if k != "total"} | {"total": 0}

@@ -106,3 +106,50 @@ def test_sgd_and_momentum_modes_run():
                            agg="cwmed", lam=0.3, opt=opt)
         st, m = _run(cfg, steps=200)
         assert bool(jnp.all(jnp.isfinite(st.w)))
+
+
+def test_omniscient_attack_uses_post_increment_weights():
+    """Regression (stale weights): little/empire must see the POST-increment
+    update counts, like the synchronous group step. m=3 round-robin: at the
+    Byzantine worker's first arrival the counts are [1,1,1] -> n=3 odd ->
+    z_max = Phi^-1(0.5) = 0, so its transmission is EXACTLY the weighted
+    honest mean. The pre-fix code used the stale [1,1,0] masses -> n=2 even
+    -> phi clipped to 1e-4 -> z ~ -3.72, a huge deviation."""
+    cfg = EngineConfig(m=3, byz=(2,), arrival="round_robin",
+                       attack=AttackConfig("little"), agg="mean", lam=0.0,
+                       opt=OptConfig(name="sgd", lr=1e-3))
+    eng = AsyncByzantineEngine(cfg, loss_fn, D_DIM)
+    rng = np.random.default_rng(3)
+    st = eng.init(jnp.zeros((D_DIM,)), _init_batches(rng, cfg.m))
+    st, _ = eng.step(st, _batch(rng))           # worker 0 (honest)
+    st, _ = eng.step(st, _batch(rng))           # worker 1 (honest)
+    honest_rows = np.asarray(st.D[:2]).copy()   # buffers the attacker sees
+    st, m = eng.step(st, _batch(rng))           # worker 2 (Byzantine, little)
+    assert bool(m["is_byz"])
+    mu = honest_rows.mean(axis=0)               # equal post-counts [1,1]
+    np.testing.assert_allclose(np.asarray(st.D[2]), mu, rtol=1e-5, atol=1e-6)
+
+
+def test_little_attack_zmax_tracks_updated_masses():
+    """After k full rounds the little z_max must be derived from the masses
+    INCLUDING the arriving Byzantine worker's new count."""
+    from repro.core.attacks import _little_zmax
+
+    cfg = EngineConfig(m=3, byz=(2,), arrival="round_robin",
+                       attack=AttackConfig("little"), agg="mean", lam=0.0,
+                       opt=OptConfig(name="sgd", lr=1e-3))
+    eng = AsyncByzantineEngine(cfg, loss_fn, D_DIM)
+    rng = np.random.default_rng(4)
+    st = eng.init(jnp.zeros((D_DIM,)), _init_batches(rng, cfg.m))
+    for _ in range(8):                          # rounds 0-1 + workers 0,1 of round 2
+        st, _ = eng.step(st, _batch(rng))
+    D_before = np.asarray(st.D).copy()
+    st, m = eng.step(st, _batch(rng))           # byz arrival: counts -> [3,3,3]
+    assert bool(m["is_byz"])
+    hw = np.asarray([3.0, 3.0, 0.0])
+    mu = (hw[:, None] * D_before).sum(0) / hw.sum()
+    var = (hw[:, None] * (D_before - mu) ** 2).sum(0) / hw.sum()
+    z = float(_little_zmax(jnp.asarray(6.0), jnp.asarray(3.0)))   # post masses
+    expect = mu - z * np.sqrt(np.maximum(var, 0.0))
+    np.testing.assert_allclose(np.asarray(st.D[2]), expect, rtol=1e-4,
+                               atol=1e-5)

@@ -83,3 +83,31 @@ def test_projection_keeps_ball():
     for _ in range(5):
         state = opt_update(cfg, state, {"w": jnp.ones((6,))})
         assert float(jnp.linalg.norm(state.w["w"])) <= 1.0 + 1e-5
+
+
+def test_weight_decay_uniform_across_optimizers():
+    """Regression: cfg.weight_decay was applied by server_step (mu2) but
+    silently DROPPED by the sgd/momentum branches of opt_update. With zero
+    gradients, every optimizer must now shrink w by exactly lr*wd*w."""
+    for name, kw in [("sgd", {}), ("momentum", {"beta": 0.9}),
+                     ("mu2", {"gamma": 0.1, "beta": 0.25})]:
+        cfg = OptConfig(name=name, lr=0.1, weight_decay=0.5, **kw)
+        state = init_opt(cfg, {"w": jnp.ones((4,))})
+        zeros = {"w": jnp.zeros((4,))}
+        state = opt_update(cfg, state, zeros,
+                           zeros if name == "mu2" else None)
+        np.testing.assert_allclose(np.asarray(state.w["w"]),
+                                   np.full((4,), 1.0 - 0.1 * 0.5),
+                                   rtol=1e-6, err_msg=name)
+
+
+def test_weight_decay_default_zero_unchanged():
+    """wd=0 keeps the historical sgd/momentum updates bit-for-bit."""
+    for name in ("sgd", "momentum"):
+        cfg = OptConfig(name=name, lr=0.1)
+        state = init_opt(cfg, {"w": jnp.ones((4,))})
+        g = {"w": jnp.full((4,), 2.0)}
+        state = opt_update(cfg, state, g)
+        step = 0.1 * 2.0 * (1.0 if name == "sgd" else (1.0 - 0.9))
+        np.testing.assert_allclose(np.asarray(state.w["w"]), 1.0 - step,
+                                   rtol=1e-6)

@@ -80,6 +80,61 @@ def test_momentum_and_sgd_steps():
         assert np.isfinite(losses).all()
 
 
+def test_group_sizes_largest_remainder():
+    """Regression: skewed ``group_sizes`` vs batch B used to drive the last
+    group to zero/negative rows via ``sizes[-1] += B - sum(sizes)`` (an empty
+    slice -> NaN group loss). Largest-remainder with a >=1 floor must always
+    partition B."""
+    from repro.dist.steps import _group_sizes
+
+    # the historical failure: (100,1,1,1) over B=8 gave [7,1,1,-1]
+    sizes = _group_sizes(RobustDPConfig(n_groups=4, group_sizes=(100, 1, 1, 1)), 8)
+    assert sum(sizes) == 8 and min(sizes) >= 1, sizes
+    assert sizes[0] == 5    # bulk goes to the heavy group, floor keeps the rest
+
+    for gs, B in [((100, 1, 1, 1), 8), ((1, 1, 1, 97), 8), ((3, 5), 16),
+                  ((7, 7, 7), 10), ((1, 2, 3, 2), 8), ((2, 2, 2, 2), 4)]:
+        sizes = _group_sizes(RobustDPConfig(n_groups=len(gs), group_sizes=gs), B)
+        assert sum(sizes) == B and min(sizes) >= 1, (gs, B, sizes)
+    with pytest.raises(AssertionError):
+        _group_sizes(RobustDPConfig(n_groups=4, group_sizes=(1, 1, 1, 1)), 3)
+    with pytest.raises(AssertionError):
+        # total == B must NOT bypass the floor: a 0-ratio group is rejected
+        _group_sizes(RobustDPConfig(n_groups=2, group_sizes=(8, 0)), 8)
+
+
+def test_robust_step_skewed_group_sizes_finite():
+    """The config that used to produce an empty slice now trains with finite
+    group losses."""
+    opt = OptConfig(name="mu2", lr=5e-3, gamma=0.1, beta=0.25)
+    rcfg = RobustDPConfig(n_groups=4, agg="ctma:cwmed", lam=0.25,
+                          weight_mode="batch_size", group_sizes=(100, 1, 1, 1))
+    state = init_train_state(TINY, opt, jax.random.PRNGKey(0), rcfg)
+    losses = _run(make_robust_train_step(TINY, opt, rcfg), state,
+                  lm_batches(TINY, 8, 32, seed=4), 5)
+    assert np.isfinite(losses).all(), losses
+
+
+def test_robust_step_weight_decay_applied():
+    """sgd/momentum robust steps apply the same decoupled weight decay as
+    server_step (they used to drop it silently)."""
+    from repro.utils import global_norm
+
+    for name in ("sgd", "momentum"):
+        finals = {}
+        for wd in (0.0, 0.5):
+            opt = OptConfig(name=name, lr=1e-2, weight_decay=wd)
+            rcfg = RobustDPConfig(n_groups=2, agg="mean", lam=0.0)
+            state = init_train_state(TINY, opt, jax.random.PRNGKey(0), rcfg)
+            step = jax.jit(make_robust_train_step(TINY, opt, rcfg))
+            data = lm_batches(TINY, 8, 32, seed=5)
+            state, _ = step(state, {k: jnp.asarray(v)
+                                    for k, v in next(data).items()})
+            finals[wd] = float(global_norm(state.opt.w))
+        # pre-fix both runs were identical; decoupled decay must shrink w
+        assert finals[0.5] < finals[0.0] * 0.999, (name, finals)
+
+
 def test_smoke_config_with_robust_path():
     cfg = smoke_config("qwen2-moe-a2.7b")
     opt = OptConfig(name="mu2", lr=3e-3, gamma=0.1, beta=0.25)
