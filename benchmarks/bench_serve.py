@@ -1,0 +1,69 @@
+"""Serve-path A/B benchmark: static fixed-batch vs continuous-batching decode
+on a skewed-length workload (short requests pay for the longest one in a
+static batch; continuous retires and backfills slots independently).
+
+Rows follow the orchestrator's ``name,value,derived`` convention; every
+``serve_*`` row is also persisted to ``BENCH_serve.json`` by benchmarks/run.py
+so successive PRs accumulate a serving-perf trajectory.
+"""
+from __future__ import annotations
+
+import copy
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models.lm import init_lm
+from repro.serve import ServeConfig, ServeEngine, synth_workload
+
+
+def _run_pair(cfg, params, workload, scfg):
+    reports = {}
+    for engine in ("static", "continuous"):
+        reqs = [copy.deepcopy(r) for r in workload]
+        reports[engine] = ServeEngine(cfg, params, scfg, engine=engine).run(reqs)
+    # greedy outputs must be token-identical across the two engines —
+    # a perf number from diverging outputs would be meaningless
+    if scfg.temperature <= 0.0:
+        for uid, toks in reports["static"].outputs.items():
+            assert reports["continuous"].outputs[uid] == toks, \
+                f"static/continuous divergence on request {uid}"
+    return reports
+
+
+def run(full: bool = False, smoke: bool = False) -> list[str]:
+    n_requests, slots = (32, 8) if smoke else (64, 8)
+    gen_max = 64          # the skewed 4..64 workload from the acceptance spec
+    cfg = smoke_config("qwen2-1.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    workload = synth_workload(
+        n_requests, cfg.vocab, seed=0, prompt_lens=(8, 32),
+        gen_lens=(4, gen_max), short_frac=0.8, rate=0.0)
+    scfg = ServeConfig(n_slots=slots, max_len=32 + gen_max,
+                       max_prefill_batch=4)
+    reports = _run_pair(cfg, params, workload, scfg)
+    s, c = reports["static"], reports["continuous"]
+
+    rows = []
+    for tag, rep in (("static", s), ("continuous", c)):
+        rows += [
+            f"serve_{tag}_decode_tok_s,{rep.decode_tok_s:.1f},"
+            f"decode_s={rep.decode_s:.3f};steps={rep.decode_steps}",
+            f"serve_{tag}_prefill_tok_s,{rep.prefill_tok_s:.1f},"
+            f"prefill_s={rep.prefill_s:.3f};compile_s={rep.compile_s:.2f}",
+            f"serve_{tag}_latency_p50_ms,{rep.latency_p50_s * 1e3:.1f},"
+            f"p99_ms={rep.latency_p99_s * 1e3:.1f}",
+            f"serve_{tag}_occupancy,{rep.mean_occupancy:.3f},"
+            f"slots={slots};requests={n_requests}",
+        ]
+    speedup = c.decode_tok_s / s.decode_tok_s if s.decode_tok_s else 0.0
+    rows.append(
+        f"serve_speedup_decode,{speedup:.2f},"
+        f"continuous/static decode tok/s on skewed gen 4..{gen_max} "
+        f"({n_requests} reqs, {slots} slots)")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print(r)

@@ -16,11 +16,16 @@ experimental panels:
                 run under XLA_FLAGS=--xla_force_host_platform_device_count=8)
     kernel_*    Pallas kernel timings (interpret mode)
     roofline_*  §Roofline terms from the dry-run artifacts
+    serve_*     static vs continuous-batching decode A/B (tok/s, p50/p99
+                latency, slot occupancy, decode speedup) — the value column
+                carries the metric, not microseconds
 
 Aggregation rows additionally persist to ``BENCH_agg.json`` at the repo root
 so successive PRs accumulate a perf trajectory (``--smoke`` runs the reduced
 aggcost + agghier grids only — the CI fast path — and still records the
-fused-CTMA speedup at the acceptance shape m=17, d=100k).
+fused-CTMA speedup at the acceptance shape m=17, d=100k). Serve rows persist
+the same way to ``BENCH_serve.json`` (``--only serve --smoke`` is the CI
+serve step).
 """
 from __future__ import annotations
 
@@ -40,9 +45,11 @@ BENCHES = {
     "thm42": "benchmarks.bench_convergence",
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.bench_roofline",
+    "serve": "benchmarks.bench_serve",
 }
 
 BENCH_AGG_PATH = Path(__file__).resolve().parents[1] / "BENCH_agg.json"
+BENCH_SERVE_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 
 
 def _parse_row(row: str) -> dict:
@@ -50,21 +57,31 @@ def _parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
-def persist_agg(rows: list[str]) -> None:
-    """Append this run's aggregation rows to BENCH_agg.json (perf trajectory)."""
-    agg_rows = [_parse_row(r) for r in rows
-                if r.startswith(("aggcost_", "aggpallas_", "agghier_"))]
-    if not agg_rows:
+def _persist(path: Path, prefixes: tuple, rows: list[str], tag: str) -> None:
+    """Append matching rows to a trajectory file, keeping the last 20 runs."""
+    matched = [_parse_row(r) for r in rows if r.startswith(prefixes)]
+    if not matched:
         return
     history = []
-    if BENCH_AGG_PATH.exists():
+    if path.exists():
         try:
-            history = json.loads(BENCH_AGG_PATH.read_text()).get("runs", [])
+            history = json.loads(path.read_text()).get("runs", [])
         except (json.JSONDecodeError, AttributeError):
             history = []
-    history.append({"unix_time": int(time.time()), "rows": agg_rows})
-    BENCH_AGG_PATH.write_text(json.dumps({"runs": history[-20:]}, indent=1))
-    print(f"# wrote {len(agg_rows)} agg rows to {BENCH_AGG_PATH.name}", file=sys.stderr)
+    history.append({"unix_time": int(time.time()), "rows": matched})
+    path.write_text(json.dumps({"runs": history[-20:]}, indent=1))
+    print(f"# wrote {len(matched)} {tag} rows to {path.name}", file=sys.stderr)
+
+
+def persist_agg(rows: list[str]) -> None:
+    """Append this run's aggregation rows to BENCH_agg.json (perf trajectory)."""
+    _persist(BENCH_AGG_PATH, ("aggcost_", "aggpallas_", "agghier_"), rows, "agg")
+
+
+def persist_serve(rows: list[str]) -> None:
+    """Append this run's serve rows to BENCH_serve.json (tokens/s, p50/p99
+    latency, slot occupancy, static-vs-continuous decode speedup)."""
+    _persist(BENCH_SERVE_PATH, ("serve_",), rows, "serve")
 
 
 def main() -> None:
@@ -102,6 +119,7 @@ def main() -> None:
             failures += 1
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
     persist_agg(all_rows)
+    persist_serve(all_rows)
     if failures:
         raise SystemExit(1)
 

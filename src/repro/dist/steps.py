@@ -312,3 +312,73 @@ def make_serve_step(cfg: ModelConfig):
         return decode_step(params, cfg, cache, tokens)
 
     return step
+
+
+def make_serve_prefill_step(cfg: ModelConfig, max_len: int):
+    """step(params, batch, lens) -> (logits (B,1,V), cache). Exact
+    right-padded prefill for the continuous-batching serve path: ``lens``
+    ((B,) int32) carries each request's true length, the emitted cache rows
+    match an unpadded prefill exactly (KV drop-scatter, dt-masked SSM state,
+    gathered RG-LRU state — see models/lm.py), ``cache["pos"]`` is
+    per-request, and logits cover ONLY each request's last real position."""
+
+    def step(params, batch: dict, lens: Array):
+        return prefill(params, cfg, batch, max_len, lens=lens)
+
+    return step
+
+
+def sample_tokens(logits: Array, keys: Array, temperature: float,
+                  top_k: int = 0) -> Array:
+    """Per-row token sampling. logits (B, V) float; keys (B, 2) uint32 raw
+    PRNG keys (one per row — the serve engines derive them from the request
+    uid and token index, so sampling is identical regardless of slot
+    assignment or batch composition). temperature <= 0 → greedy argmax."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = logits.astype(jnp.float32) / temperature
+    V = x.shape[-1]
+    if top_k and top_k < V:
+        kth = jax.lax.top_k(x, top_k)[0][..., -1:]
+        x = jnp.where(x < kth, -jnp.inf, x)
+    g = jax.vmap(lambda k, row: jax.random.gumbel(k, row.shape, jnp.float32))(keys, x)
+    return jnp.argmax(x + g, axis=-1).astype(jnp.int32)
+
+
+def sample_next(row_logits: Array, req_keys: Array, token_idx: Array,
+                temperature: float, top_k: int = 0) -> Array:
+    """THE sampling path for serving — first token and decode steps alike.
+    row_logits (B, V); req_keys (B, 2) uint32 per-request keys; token_idx
+    (B,) int32 index of the token being sampled within its request. The
+    per-token key is fold_in(req_key, token_idx), which is what makes
+    sampled streams independent of slot assignment, batch composition and
+    arrival order. temperature <= 0 → greedy (keys/idx ignored)."""
+    if temperature <= 0.0:
+        return jnp.argmax(row_logits, axis=-1).astype(jnp.int32)
+    keys = jax.vmap(jax.random.fold_in)(req_keys, token_idx)
+    return sample_tokens(row_logits.astype(jnp.float32), keys, temperature,
+                         top_k)
+
+
+def make_decode_slots_step(cfg: ModelConfig, temperature: float = 0.0,
+                           top_k: int = 0):
+    """step(params, cache, tokens, req_keys, gen_idx) -> (next_tokens, cache).
+
+    One continuous-batching decode step over all S slots: ``cache["pos"]`` is
+    the per-slot (S,) position vector, so slots at different depths decode in
+    the same call. ``tokens`` (S, 1) int32 are the slots' current tokens;
+    ``req_keys`` (S, 2) uint32 per-slot request PRNG keys and ``gen_idx``
+    (S,) int32 per-slot generated-token indices drive sampling (ignored when
+    temperature <= 0 — pass zeros). Callers donate the cache
+    (``donate_argnums=(1,)``). Inactive slots decode garbage that the engine
+    discards host-side; their rows never influence active slots (every op is
+    row-independent; MoE capacity coupling is the documented exception —
+    see serve/README.md)."""
+
+    def step(params, cache: dict, tokens: Array, req_keys: Array,
+             gen_idx: Array):
+        logits, cache = decode_step(params, cfg, cache, tokens)
+        nxt = sample_next(logits[:, 0], req_keys, gen_idx, temperature, top_k)
+        return nxt, cache
+
+    return step

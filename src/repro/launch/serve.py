@@ -1,67 +1,95 @@
-"""Batched decoding service loop (single-host demo of the serve path).
+"""Serving launcher: continuous-batching (repro.serve) vs static fixed-batch
+decode, under a Poisson arrival process with heterogeneous prompt/generation
+lengths.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
-        --requests 4 --prompt-len 32 --gen 16
+        --requests 16 --engine both --rate 50 --gen-max 32
 
-Prefills a batch of synthetic prompts and decodes greedily with the same
-``serve_step`` the decode dry-run shapes lower.
+Timings are reported split into compile (jit warmup), prefill and decode —
+the old single tokens/s figure folded all three together (including compile
+time) and is kept as ``combined_tok_s`` for back-compat.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import copy
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, smoke_config
-from repro.dist.steps import make_prefill_step, make_serve_step
 from repro.models.lm import init_lm
+from repro.serve import ServeConfig, ServeEngine, synth_workload
 from repro.utils import logger
+
+
+def _log_report(rep) -> None:
+    logger.info(
+        "[%s] %d reqs | compile %.2fs | prefill %.3fs (%.0f tok/s) | "
+        "decode %.3fs (%.0f tok/s, occupancy %.2f) | combined %.1f tok/s | "
+        "latency p50 %.3fs p99 %.3fs",
+        rep.engine, rep.n_requests, rep.compile_s, rep.prefill_s,
+        rep.prefill_tok_s, rep.decode_s, rep.decode_tok_s,
+        rep.mean_occupancy, rep.combined_tok_s, rep.latency_p50_s,
+        rep.latency_p99_s)
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list(ARCH_NAMES))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "static", "both"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--prefill-batch", type=int, default=4)
+    ap.add_argument("--prompt-min", type=int, default=8)
+    ap.add_argument("--prompt-max", type=int, default=32)
+    ap.add_argument("--gen-min", type=int, default=4)
+    ap.add_argument("--gen-max", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at t=0")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if not cfg.supports_decode():
         raise SystemExit(f"{cfg.name} is encoder-only: no decode path")
-    max_len = args.prompt_len + args.gen
+    extra = cfg.n_patches if cfg.frontend == "vision" else 0
+    max_len = extra + args.prompt_max + args.gen_max
     params = init_lm(jax.random.PRNGKey(args.seed), cfg)
-    prefill_step = jax.jit(make_prefill_step(cfg, max_len))
-    # donate the KV cache so the per-token slice update is in-place
-    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 
-    rng = np.random.default_rng(args.seed)
-    B = args.requests
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, args.prompt_len)), jnp.int32)}
-    if cfg.frontend == "vision":
-        batch["patches"] = jnp.asarray(rng.normal(size=(B, cfg.n_patches, cfg.d_model)),
-                                       jnp.dtype(cfg.dtype))
+    workload = synth_workload(
+        args.requests, cfg.vocab, seed=args.seed,
+        prompt_lens=(args.prompt_min, args.prompt_max),
+        gen_lens=(args.gen_min, args.gen_max), rate=args.rate,
+        n_patches=extra, d_model=cfg.d_model if extra else 0)
 
-    t0 = time.time()
-    logits, cache = prefill_step(params, batch)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [tok]
-    for _ in range(args.gen - 1):
-        logits, cache = serve_step(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out.append(tok)
-    gen = jnp.concatenate(out, axis=1)
-    jax.block_until_ready(gen)
-    dt = time.time() - t0
-    tput = B * args.gen / dt
-    logger.info("served %d requests × %d tokens in %.2fs (%.1f tok/s)",
-                B, args.gen, dt, tput)
-    return {"tokens": np.asarray(gen), "tok_per_s": tput}
+    scfg = ServeConfig(
+        n_slots=args.slots, max_len=max_len,
+        max_prefill_batch=args.prefill_batch,
+        temperature=args.temperature, top_k=args.top_k,
+        eos_id=args.eos_id, seed=args.seed)
+
+    engines = (["continuous", "static"] if args.engine == "both"
+               else [args.engine])
+    reports = {}
+    for name in engines:
+        reqs = [copy.deepcopy(r) for r in workload]
+        rep = ServeEngine(cfg, params, scfg, engine=name).run(reqs)
+        _log_report(rep)
+        reports[name] = rep
+    if len(reports) == 2:
+        c, s = reports["continuous"], reports["static"]
+        if s.decode_tok_s > 0:
+            logger.info("continuous/static decode speedup: %.2fx",
+                        c.decode_tok_s / s.decode_tok_s)
+
+    rep = reports[engines[0]]
+    return {"reports": {k: v.as_dict() for k, v in reports.items()},
+            "outputs": rep.outputs, "tok_per_s": rep.combined_tok_s}
 
 
 if __name__ == "__main__":

@@ -55,6 +55,16 @@ def cache_specs(cfg: ModelConfig, shape: InputShape) -> Pytree:
     return jax.eval_shape(partial(init_cache, cfg, shape.global_batch, shape.seq_len))
 
 
+def serve_cache_specs(cfg: ModelConfig, n_slots: int, max_len: int) -> Pytree:
+    """Zero-allocation specs for the repro.serve slot-mapped decode cache
+    (batch dim = slots, per-slot (S,) pos vector — serve/cache.py). It shards
+    like any decode cache: ``cache_sharding`` already treats axis 0 (axis 1
+    under ``groups``) as the batch/slot axis, which is how ServeEngine pins
+    its donated in-place layout on a mesh."""
+    from repro.serve.cache import init_slot_cache
+    return jax.eval_shape(partial(init_slot_cache, cfg, n_slots, max_len))
+
+
 def train_state_specs(cfg: ModelConfig, opt_cfg: OptConfig,
                       robust: Optional[RobustDPConfig] = None) -> Pytree:
     return jax.eval_shape(

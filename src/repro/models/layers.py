@@ -132,19 +132,31 @@ def attention_decode(p: dict, cfg: ModelConfig, x: Array, kind: str,
                      ) -> tuple[Array, Array, Array]:
     """Single-token decode. x: (B, 1, d). Caches: (B, W, KV, hd) where W is the
     full seq length (global layers) or the sliding window (local layers, ring
-    buffer indexed by pos % W). pos: () int32 — current absolute position.
+    buffer indexed by pos % W). pos: () int32 — current absolute position — or
+    (B,) int32 for slot-mapped serving, where each row decodes at its own
+    depth (repro.serve continuous batching).
     Returns (out, k_cache, v_cache)."""
     B = x.shape[0]
     W = k_cache.shape[1]
     q, k, v = _qkv(p, cfg, x)
-    cos, sin = rope_angles(pos[None], cfg.hd, cfg.rope_theta)
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim > 0
+    cos, sin = rope_angles(pos[:, None] if per_slot else pos[None],
+                           cfg.hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     slot = (pos % W) if kind == "local" else jnp.minimum(pos, W - 1)
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
-    if cfg.use_pallas_decode and W % 128 == 0:
+    if per_slot:
+        rows = jnp.arange(B)
+        k_cache = k_cache.at[rows, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, slot].set(v[:, 0].astype(v_cache.dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    if cfg.use_pallas_decode and W % 128 == 0 and not per_slot:
         # flash-decode kernel: streams the cache through VMEM once
+        # (per-slot flash decode is an open ROADMAP item — falls through to
+        # the masked SDPA below when pos carries a batch dim)
         from repro.kernels.swa import swa_decode_pallas
         out = swa_decode_pallas(q[:, 0], k_cache, v_cache, pos,
                                 local=(kind == "local"),
@@ -154,11 +166,13 @@ def attention_decode(p: dict, cfg: ModelConfig, x: Array, kind: str,
     else:
         # validity: ring slots written so far (local) / prefix (global)
         idx = jnp.arange(W)
+        pb = pos[:, None] if per_slot else pos  # (B,1) | ()
         if kind == "local":
-            valid = (idx <= pos % W) | (pos >= W)  # all slots valid once wrapped
+            valid = (idx <= pb % W) | (pb >= W)  # all slots valid once wrapped
         else:
-            valid = idx <= pos
-        mask = valid[None, None, None, :]  # (1,1,1,W)
+            valid = idx <= pb
+        # (B,1,1,W) per-slot / (1,1,1,W) shared
+        mask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
         out = _sdpa(cfg, q, k_cache, v_cache, mask)
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_cache, v_cache
 

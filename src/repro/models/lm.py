@@ -126,9 +126,16 @@ def _layer_fwd(lp: dict, cfg: ModelConfig, kind: str, x: Array) -> tuple[Array, 
     return x + y, aux
 
 
-def _attn_prefill(lp: dict, cfg: ModelConfig, kind: str, x: Array, cache_len: int
+def _attn_prefill(lp: dict, cfg: ModelConfig, kind: str, x: Array, cache_len: int,
+                  lens: Optional[Array] = None
                   ) -> tuple[Array, tuple[Array, Array]]:
-    """Attention forward that also emits the (ring-layout) KV cache."""
+    """Attention forward that also emits the (ring-layout) KV cache.
+
+    With ``lens`` ((B,) int32 true lengths, right-padded batch) the cache
+    write is an exact per-request scatter: only positions < lens[b] (and,
+    for local layers, within the trailing window) are written; padded
+    positions are dropped, so the emitted cache rows are bit-identical to an
+    unpadded prefill (causality keeps the forward itself exact)."""
     B, S, _ = x.shape
     q, k, v = _qkv(lp, cfg, x)
     pos = jnp.arange(S)
@@ -141,7 +148,19 @@ def _attn_prefill(lp: dict, cfg: ModelConfig, kind: str, x: Array, cache_len: in
     W = cache_len
     kc = jnp.zeros((B, W, cfg.n_kv, cfg.hd), k.dtype)
     vc = jnp.zeros((B, W, cfg.n_kv, cfg.hd), v.dtype)
-    if kind == "local":
+    if lens is not None:
+        pos_idx = pos[None, :]                               # (1, S)
+        if kind == "local":
+            tgt = pos_idx % W
+            valid = (pos_idx < lens[:, None]) & (pos_idx >= lens[:, None] - W)
+        else:
+            tgt = jnp.minimum(pos_idx, W - 1)
+            valid = pos_idx < lens[:, None]
+        tgt = jnp.broadcast_to(jnp.where(valid, tgt, W), (B, S))  # W → dropped
+        rows = jnp.arange(B)[:, None]
+        kc = kc.at[rows, tgt].set(k, mode="drop")
+        vc = vc.at[rows, tgt].set(v, mode="drop")
+    elif kind == "local":
         take = min(W, S)
         src_pos = jnp.arange(S - take, S)
         kc = kc.at[:, src_pos % W].set(k[:, -take:])
@@ -153,17 +172,17 @@ def _attn_prefill(lp: dict, cfg: ModelConfig, kind: str, x: Array, cache_len: in
     return out, (kc, vc)
 
 
-def _layer_prefill(lp, cfg, kind, x, cache_len):
+def _layer_prefill(lp, cfg, kind, x, cache_len, lens=None):
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     if kind == "ssm":
-        out, cache = _ssm_prefill(lp["mix"], cfg, h)
+        out, cache = _ssm_prefill(lp["mix"], cfg, h, lens)
         return x + out, cache
     if kind == "rec":
-        out, cache = _rec_prefill(lp["mix"], cfg, h)
+        out, cache = _rec_prefill(lp["mix"], cfg, h, lens)
         x = x + out
     else:
         W = cfg.window if kind == "local" else cache_len
-        out, cache = _attn_prefill(lp["mix"], cfg, kind, h, W)
+        out, cache = _attn_prefill(lp["mix"], cfg, kind, h, W, lens)
         x = x + out
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
     if _mlp_kind(cfg, kind) == "moe":
@@ -173,8 +192,22 @@ def _layer_prefill(lp, cfg, kind, x, cache_len):
     return x + y, cache
 
 
-def _ssm_prefill(p, cfg, x):
-    """Run ssm_block while capturing the final recurrent + conv state."""
+def _conv_window(conv_in: Array, lens: Array, Kw: int) -> Array:
+    """Per-request trailing conv window: rows [lens-Kw+1, lens) of ``conv_in``,
+    zero-filled where the window reaches before position 0 (matching the
+    zero-initialised decode conv cache)."""
+    B, S, _ = conv_in.shape
+    offs = lens[:, None] - (Kw - 1) + jnp.arange(Kw - 1)[None, :]   # (B, Kw-1)
+    g = conv_in[jnp.arange(B)[:, None], jnp.clip(offs, 0, S - 1)]
+    return jnp.where((offs >= 0)[..., None], g, 0).astype(conv_in.dtype)
+
+
+def _ssm_prefill(p, cfg, x, lens=None):
+    """Run ssm_block while capturing the final recurrent + conv state.
+
+    With ``lens`` the padded positions get dt = 0 — decay exp(0·A) = 1 and
+    update x·dt = 0 — so the emitted state is exactly the state after the
+    request's true last token; the conv cache is gathered per request."""
     from .ssm import SSMCache, _conv1d  # local import to reuse internals
     B_, S, _ = x.shape
     di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
@@ -183,12 +216,18 @@ def _ssm_prefill(p, cfg, x):
     z, xc, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
     Kw = cfg.conv_width
-    conv_cache = jnp.zeros((B_, Kw - 1, di + 2 * N), x.dtype)
-    take = min(Kw - 1, S)
-    conv_cache = conv_cache.at[:, Kw - 1 - take:].set(conv_in[:, S - take:])
+    if lens is None:
+        conv_cache = jnp.zeros((B_, Kw - 1, di + 2 * N), x.dtype)
+        take = min(Kw - 1, S)
+        conv_cache = conv_cache.at[:, Kw - 1 - take:].set(conv_in[:, S - take:])
+    else:
+        conv_cache = _conv_window(conv_in, lens, Kw)
     conv_out = jax.nn.silu(_conv1d(conv_in, p["conv_w"], p["conv_b"]))
     xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    if lens is not None:
+        pmask = jnp.arange(S)[None, :, None] < lens[:, None, None]
+        dt = jnp.where(pmask, dt, 0.0)
     A = -jnp.exp(p["a_log"].astype(jnp.float32))
     xh = xc.reshape(B_, S, H, P)
     y, final_state = ssm_chunked_pad(xh.astype(jnp.float32), dt, A,
@@ -218,16 +257,19 @@ def ssm_chunked_pad(x, dt, A, Bm, Cm, chunk):
     return y[:, :s], state
 
 
-def _rec_prefill(p, cfg, x):
+def _rec_prefill(p, cfg, x, lens=None):
     from .griffin import LRUCache, _conv1d, _rglru_coeffs
     B_, S, _ = x.shape
     w = cfg.lru_width or cfg.d_model
     gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"]))
     u0 = jnp.einsum("bsd,dw->bsw", x, p["w_in_branch"])
     Kw = cfg.conv_width
-    conv_cache = jnp.zeros((B_, Kw - 1, w), x.dtype)
-    take = min(Kw - 1, S)
-    conv_cache = conv_cache.at[:, Kw - 1 - take:].set(u0[:, S - take:])
+    if lens is None:
+        conv_cache = jnp.zeros((B_, Kw - 1, w), x.dtype)
+        take = min(Kw - 1, S)
+        conv_cache = conv_cache.at[:, Kw - 1 - take:].set(u0[:, S - take:])
+    else:
+        conv_cache = _conv_window(u0, lens, Kw)
     u = _conv1d(u0, p["conv_w"], p["conv_b"])
     a, b = _rglru_coeffs(p, u)
 
@@ -238,7 +280,10 @@ def _rec_prefill(p, cfg, x):
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
     out = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype) * gate, p["w_out"])
-    return out, LRUCache(conv=conv_cache, h=h[:, -1])
+    # per-request final state: the scan is causal, so h[b, lens[b]-1] is
+    # untouched by the right padding
+    h_last = h[:, -1] if lens is None else h[jnp.arange(B_), lens - 1]
+    return out, LRUCache(conv=conv_cache, h=h_last)
 
 
 def _layer_decode(lp, cfg, kind, x, cache, pos):
@@ -361,9 +406,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return cache
 
 
-def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int
-            ) -> tuple[Array, dict]:
-    """Full forward over the prompt, emitting logits and the decode cache."""
+def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int,
+            lens: Optional[Array] = None) -> tuple[Array, dict]:
+    """Full forward over the prompt, emitting logits and the decode cache.
+
+    ``lens`` ((B,) int32) enables exact right-padded prefill for the serve
+    path: each request's true sequence length (vision: patches + text). The
+    emitted per-request cache rows — KV scatter, SSM state (dt-masked),
+    RG-LRU state — match an unpadded prefill of that request exactly, and
+    ``cache["pos"]`` is the per-slot (B,) position vector that
+    ``decode_step`` advances independently. Logits are returned ONLY at each
+    request's last real position — shape (B, 1, V), the hidden row is
+    gathered BEFORE the unembed so the (B, S, V) matmul never materializes
+    on the serving hot path. Requires a causal model."""
+    if lens is not None:
+        assert cfg.causal, "right-padded exact prefill requires a causal model"
     x = embed_inputs(params, cfg, batch)
     S = x.shape[1]
     prefix, n_full, rem = layer_plan(cfg)
@@ -372,7 +429,7 @@ def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int
     if prefix:
         cps = []
         for lp, kind in zip(params["prefix"], prefix):
-            x, cp = _layer_prefill(lp, cfg, kind, x, max_len)
+            x, cp = _layer_prefill(lp, cfg, kind, x, max_len, lens)
             cps.append(cp)
         cache["prefix"] = cps
 
@@ -380,7 +437,7 @@ def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int
         def group_body(x, gp):
             cs = []
             for lp, kind in zip(gp, cfg.pattern):
-                x, cp = _layer_prefill(lp, cfg, kind, x, max_len)
+                x, cp = _layer_prefill(lp, cfg, kind, x, max_len, lens)
                 cs.append(cp)
             return x, tuple(cs)
         x, gcache = jax.lax.scan(group_body, x, params["groups"])
@@ -389,19 +446,29 @@ def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int
     if rem:
         crs = []
         for lp, kind in zip(params["rem"], rem):
-            x, cp = _layer_prefill(lp, cfg, kind, x, max_len)
+            x, cp = _layer_prefill(lp, cfg, kind, x, max_len, lens)
             crs.append(cp)
         cache["rem"] = crs
 
-    cache["pos"] = jnp.asarray(S, jnp.int32)
+    cache["pos"] = (jnp.asarray(S, jnp.int32) if lens is None
+                    else lens.astype(jnp.int32))
     if cfg.frontend == "vision":
         x = x[:, -batch["tokens"].shape[1]:]
+    if lens is not None:
+        idx = lens - 1
+        if cfg.frontend == "vision":
+            idx = idx - cfg.n_patches        # x is text-relative here
+        x = x[jnp.arange(x.shape[0]), idx][:, None]   # (B, 1, d)
     return logits_from_hidden(params, cfg, x), cache
 
 
 def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array
                 ) -> tuple[Array, dict]:
-    """One decode step. tokens: (B, 1) int32. Returns (logits (B,1,V), cache)."""
+    """One decode step. tokens: (B, 1) int32. Returns (logits (B,1,V), cache).
+
+    ``cache["pos"]`` may be a scalar (one shared depth — the classic batched
+    path) or a (B,) vector (slot-mapped serving: every row decodes at its own
+    absolute position; see repro.serve)."""
     dtype = jnp.dtype(cfg.dtype)
     pos = cache["pos"]
     x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, dtype)

@@ -1,0 +1,107 @@
+"""Slot-mapped decode cache: fixed (S, max_len, ...) ring buffers + per-slot
+position vector, donated in-place by the engine's jitted steps.
+
+The device-side cache is the ordinary ``models.lm.init_cache`` pytree with two
+twists: the leading batch dim is the number of SLOTS (requests map onto slots,
+not batch rows), and ``cache["pos"]`` is a (S,) int32 vector — every slot
+decodes at its own absolute depth (models/lm.py ``decode_step`` accepts both
+the scalar and the vector form).
+
+``insert_prefill`` scatters whole per-request cache rows (KV ring buffers,
+SSM conv+state, RG-LRU conv+h, and pos) from a right-padded prefill into free
+slots in one fused jitted call; a slot id equal to the slot count is the DUMP
+index (out-of-bounds → mode="drop"), used for the padding rows that keep the
+prefill batch shape static. Because the scatter overwrites EVERY leaf row of
+the target slot — including the zero-filled tail beyond the request's true
+length that the exact prefill emits — a freed slot's stale KV can never leak
+into the request that reuses it.
+
+Host-side bookkeeping (which slot belongs to which request) lives in
+``SlotMap`` — a free-list allocator; the device never sees request identity.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.lm import init_cache
+
+Pytree = Any
+
+
+def init_slot_cache(cfg: ModelConfig, n_slots: int, max_len: int) -> dict:
+    """Decode cache with ``n_slots`` rows and a per-slot (S,) pos vector."""
+    cache = init_cache(cfg, n_slots, max_len)
+    cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def _top_key(path) -> Optional[str]:
+    return getattr(path[0], "key", None) if path else None
+
+
+def insert_prefill(cache: dict, pcache: dict, slot_ids) -> dict:
+    """Scatter per-request prefill cache rows into slots.
+
+    cache: slot cache (rows = S slots); pcache: the cache a right-padded
+    ``prefill(..., lens=)`` emitted (rows = prefill batch); slot_ids: (Bp,)
+    int32 target slot per prefill row, with ``n_slots`` acting as the dump
+    index for padding rows. Leaves under ``groups`` carry the scanned-layer
+    stack on axis 0, so their slot axis is axis 1 (same convention as
+    dist/sharding.cache_sharding). Jit with ``donate_argnums=(0,)``."""
+    slot_ids = jnp.asarray(slot_ids, jnp.int32)
+
+    def put(path, leaf, prow):
+        if _top_key(path) == "groups" and leaf.ndim >= 2:
+            return leaf.at[:, slot_ids].set(prow.astype(leaf.dtype), mode="drop")
+        return leaf.at[slot_ids].set(prow.astype(leaf.dtype), mode="drop")
+
+    return jax.tree_util.tree_map_with_path(put, cache, pcache)
+
+
+class SlotMap:
+    """Host-side free-list slot allocator (alloc / free / occupancy)."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))  # pop() -> 0 first
+        self._owner: dict[int, int] = {}  # slot -> request uid
+
+    @property
+    def dump_slot(self) -> int:
+        """Out-of-bounds slot id used to drop padding rows at insert."""
+        return self.n_slots
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_active / self.n_slots
+
+    def active_slots(self) -> List[int]:
+        return sorted(self._owner)
+
+    def owner(self, slot: int) -> int:
+        return self._owner[slot]
+
+    def alloc(self, uid: int) -> int:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        self._owner[slot] = uid
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise KeyError(f"slot {slot} is not allocated")
+        del self._owner[slot]
+        self._free.append(slot)

@@ -1,0 +1,369 @@
+"""Continuous-batching serve engine.
+
+``ServeEngine`` drives three jitted steps over the slot-mapped cache:
+
+  prefill   — ``make_serve_prefill_step``: exact right-padded prefill of a
+              bucketed prompt batch (static shapes: (prefill_batch, bucket)).
+  insert    — ``cache.insert_prefill``: scatter the per-request cache rows
+              into free slots (donated — in-place on the slot cache).
+  decode    — ``make_decode_slots_step``: ONE token for ALL slots per call,
+              each slot at its own depth (per-slot pos), with temperature /
+              top-k sampling keyed by (request uid, token index) so sampled
+              streams are identical regardless of slot assignment, batch
+              composition or arrival order.
+
+``engine="static"`` runs the A/B baseline on the same jitted steps: one
+fixed batch at a time — admission only when the engine is idle, no slot
+retirement until the whole batch finishes — so short requests pay for the
+longest request in their batch (the behaviour the ROADMAP item calls out).
+
+Metrics are split into compile (warmup) / prefill / decode wall time;
+`combined_tok_s` keeps the old serve launcher's single figure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.steps import (make_decode_slots_step, make_serve_prefill_step,
+                              sample_next)
+from repro.models.config import ModelConfig
+from repro.serve.cache import SlotMap, init_slot_cache, insert_prefill
+from repro.serve.scheduler import (PrefillPlan, Request, Scheduler,
+                                   default_buckets)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    n_slots: int = 8
+    max_len: int = 256              # slot capacity (prompt + generation)
+    buckets: tuple = ()             # () -> powers of two up to max_len
+    max_prefill_batch: int = 4      # fixed prefill batch dim (dump-row padded)
+    temperature: float = 0.0        # <= 0 -> greedy
+    top_k: int = 0                  # 0 -> full vocab
+    eos_id: Optional[int] = None    # None -> retire on max_new_tokens only
+    seed: int = 0                   # sampling PRNG seed (per-request fold_in)
+
+
+@dataclasses.dataclass
+class ServeReport:
+    engine: str
+    n_requests: int = 0
+    prefill_tokens: int = 0
+    gen_tokens: int = 0
+    compile_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    wall_s: float = 0.0             # serving wall time (compile excluded)
+    decode_steps: int = 0
+    decode_tok_s: float = 0.0       # useful generated tokens / decode wall
+    prefill_tok_s: float = 0.0
+    combined_tok_s: float = 0.0     # gen tokens / (compile+prefill+decode)
+    latency_p50_s: float = 0.0      # request completion - arrival
+    latency_p99_s: float = 0.0
+    mean_occupancy: float = 0.0     # useful slot-rows per decode step
+    outputs: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("outputs")
+        return d
+
+
+class ServeEngine:
+    """Slot-mapped serving engine (``engine="continuous"`` or ``"static"``).
+
+    ``mesh`` optionally threads the launch/specs.py decode shardings:
+    params get the weight-stationary decode layout and the slot cache the
+    dp-batched cache layout, with the decode output sharding pinned to the
+    input so the cache round-trips in place."""
+
+    def __init__(self, cfg: ModelConfig, params: Pytree, scfg: ServeConfig,
+                 engine: str = "continuous", mesh=None):
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only: no decode path")
+        if engine not in ("continuous", "static"):
+            raise ValueError(f"unknown engine {engine!r}")
+        self.cfg = cfg
+        self.scfg = scfg
+        self.engine = engine
+        self.static = engine == "static"
+        S = scfg.n_slots
+        # static mode prefills the whole batch at once; continuous packs up
+        # to max_prefill_batch requests per (bucketed) prefill call
+        self._prefill_batch = S if self.static else min(scfg.max_prefill_batch, S)
+        buckets = scfg.buckets or default_buckets(scfg.max_len)
+        self.sched = Scheduler(buckets, self._prefill_batch)
+        self.slots = SlotMap(S)
+        self.slot_req: Dict[int, Request] = {}
+
+        prefill_step = make_serve_prefill_step(cfg, scfg.max_len)
+        decode_step = make_decode_slots_step(cfg, scfg.temperature, scfg.top_k)
+        t, k = scfg.temperature, scfg.top_k
+
+        def first_token(logits, req_keys):
+            # prefill logits are (B, 1, V): already each request's last real
+            # position; token index 0 keys the request's first sample
+            return sample_next(logits[:, 0], req_keys,
+                               jnp.zeros(req_keys.shape[0], jnp.int32), t, k)
+
+        if mesh is not None:
+            from repro.dist.sharding import cache_sharding, param_sharding
+            from repro.launch.specs import serve_cache_specs
+            c_shard = cache_sharding(cfg, mesh,
+                                     serve_cache_specs(cfg, S, scfg.max_len))
+            p_shard = param_sharding(cfg, mesh, params, mode="decode")
+            params = jax.device_put(params, p_shard)
+            self._prefill = jax.jit(prefill_step)
+            self._insert = jax.jit(insert_prefill, donate_argnums=(0,),
+                                   out_shardings=c_shard)
+            # pin the cache output to its input layout: without this XLA
+            # re-replicates the updated KV cache every decoded token
+            self._decode = jax.jit(decode_step, donate_argnums=(1,),
+                                   out_shardings=(None, c_shard))
+            self.cache = jax.device_put(
+                init_slot_cache(cfg, S, scfg.max_len), c_shard)
+        else:
+            self._prefill = jax.jit(prefill_step)
+            self._insert = jax.jit(insert_prefill, donate_argnums=(0,))
+            self._decode = jax.jit(decode_step, donate_argnums=(1,))
+            self.cache = init_slot_cache(cfg, S, scfg.max_len)
+        self._first = jax.jit(first_token)
+        self.params = params
+
+        self._base_key = jax.random.PRNGKey(scfg.seed)
+        self.cur_tok = np.zeros((S,), np.int32)
+        self.req_keys = np.zeros((S, 2), np.uint32)
+        self.gen_idx = np.zeros((S,), np.int32)
+        self.report = ServeReport(engine=engine)
+        self._occ_sum = 0.0
+        self._t_start = time.perf_counter()
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._t_start
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+
+    def _positions(self, req: Request) -> int:
+        """Total sequence positions the request's prompt occupies."""
+        extra = self.cfg.n_patches if self.cfg.frontend == "vision" else 0
+        return req.prompt_len + extra
+
+    def submit(self, req: Request) -> None:
+        if self._positions(req) + req.max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt ({self._positions(req)}) + "
+                f"max_new ({req.max_new_tokens}) exceeds max_len "
+                f"{self.scfg.max_len}")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    # jitted-step drivers
+    # ------------------------------------------------------------------
+
+    def _req_key(self, uid: int) -> np.ndarray:
+        return np.asarray(jax.random.fold_in(self._base_key, uid),
+                          np.uint32)
+
+    def _do_prefill(self, plan: PrefillPlan) -> None:
+        cfg, B = self.cfg, self._prefill_batch
+        n = len(plan.requests)
+        assert n <= B
+        toks = np.zeros((B, plan.bucket_len), np.int32)
+        text_lens = np.ones((B,), np.int32)      # dump rows: length-1 prompts
+        for i, r in enumerate(plan.requests):
+            toks[i, :r.prompt_len] = r.tokens
+            text_lens[i] = r.prompt_len
+        batch = {"tokens": jnp.asarray(toks)}
+        lens = text_lens.copy()
+        if cfg.frontend == "vision":
+            patches = np.zeros((B, cfg.n_patches, cfg.d_model), np.float32)
+            for i, r in enumerate(plan.requests):
+                if r.patches is not None:
+                    patches[i] = r.patches
+            batch["patches"] = jnp.asarray(patches, jnp.dtype(cfg.dtype))
+            lens = lens + cfg.n_patches
+        slot_ids = np.full((B,), self.slots.dump_slot, np.int32)
+        keys = np.zeros((B, 2), np.uint32)
+        for i, r in enumerate(plan.requests):
+            slot_ids[i] = self.slots.alloc(r.uid)
+            if self.scfg.temperature > 0.0:
+                keys[i] = self._req_key(r.uid)
+
+        t0 = time.perf_counter()
+        logits, pcache = self._prefill(self.params, batch, jnp.asarray(lens))
+        self.cache = self._insert(self.cache, pcache, slot_ids)
+        first = np.asarray(self._first(logits, jnp.asarray(keys)))
+        jax.block_until_ready(self.cache)
+        self.report.prefill_s += time.perf_counter() - t0
+        self.report.prefill_tokens += int(text_lens[:n].sum())
+
+        now = self._now()      # stamp AFTER the device work that produced it
+        for i, r in enumerate(plan.requests):
+            slot = int(slot_ids[i])
+            tok = int(first[i])
+            self.slot_req[slot] = r
+            r.out_tokens.append(tok)
+            r.t_first_token = now
+            self.cur_tok[slot] = tok
+            self.req_keys[slot] = keys[i]
+            self.gen_idx[slot] = 1           # next sampled token's index
+            self.report.gen_tokens += 1
+            self._maybe_finish(slot, r, tok, now)
+
+    def _maybe_finish(self, slot: int, r: Request, tok: int, now: float) -> None:
+        eos = self.scfg.eos_id is not None and tok == self.scfg.eos_id
+        if eos or len(r.out_tokens) >= r.max_new_tokens:
+            r.t_finish = now
+            if not self.static:
+                self._release(slot)
+
+    def _release(self, slot: int) -> None:
+        del self.slot_req[slot]
+        self.slots.free(slot)
+
+    def _decode_tick(self) -> None:
+        useful = sum(1 for r in self.slot_req.values() if not r.done)
+        t0 = time.perf_counter()
+        toks, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.cur_tok[:, None]),
+            jnp.asarray(self.req_keys), jnp.asarray(self.gen_idx))
+        toks = np.asarray(toks)                      # host sync
+        self.report.decode_s += time.perf_counter() - t0
+        self.report.decode_steps += 1
+        self._occ_sum += useful / self.slots.n_slots
+
+        now = self._now()      # stamp AFTER the device work that produced it
+        for slot in list(self.slot_req):
+            r = self.slot_req[slot]
+            if r.done:                               # static: blocked slot
+                continue
+            tok = int(toks[slot])
+            r.out_tokens.append(tok)
+            self.cur_tok[slot] = tok
+            self.gen_idx[slot] += 1
+            self.report.gen_tokens += 1
+            self._maybe_finish(slot, r, tok, now)
+        if self.static and self.slot_req and \
+                all(r.done for r in self.slot_req.values()):
+            for slot in list(self.slot_req):         # whole batch retires
+                self._release(slot)
+
+    # ------------------------------------------------------------------
+    # warmup (compile-time accounting)
+    # ------------------------------------------------------------------
+
+    def warmup(self, bucket_lens: Sequence[int]) -> float:
+        """Compile the decode step and each (prefill, insert, first-token)
+        bucket shape on dummy data; the elapsed time is reported as
+        ``compile_s`` so serving numbers exclude jit compiles. Dump-row
+        inserts and free-slot decodes leave the (empty) engine state
+        semantically untouched."""
+        cfg, B = self.cfg, self._prefill_batch
+        t0 = time.perf_counter()
+        for L in sorted({self.sched.bucket_for(l) for l in bucket_lens}):
+            batch = {"tokens": jnp.zeros((B, L), jnp.int32)}
+            lens = np.ones((B,), np.int32)
+            if cfg.frontend == "vision":
+                batch["patches"] = jnp.zeros((B, cfg.n_patches, cfg.d_model),
+                                             jnp.dtype(cfg.dtype))
+                lens = lens + cfg.n_patches
+            logits, pcache = self._prefill(self.params, batch,
+                                           jnp.asarray(lens))
+            self.cache = self._insert(
+                self.cache, pcache,
+                np.full((B,), self.slots.dump_slot, np.int32))
+            self._first(logits, jnp.zeros((B, 2), jnp.uint32))
+        _, self.cache = self._decode(
+            self.params, self.cache, jnp.zeros((self.slots.n_slots, 1), jnp.int32),
+            jnp.zeros((self.slots.n_slots, 2), jnp.uint32),
+            jnp.zeros((self.slots.n_slots,), jnp.int32))
+        jax.block_until_ready(self.cache)
+        dt = time.perf_counter() - t0
+        self.report.compile_s += dt
+        return dt
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], warmup: bool = True
+            ) -> ServeReport:
+        """Serve ``requests`` (arrival times are wall-clock offsets from the
+        start of the loop; pre-sorted or not) and return the report."""
+        reqs = sorted(requests, key=lambda r: r.arrival)
+        for r in reqs:          # fail fast — BEFORE paying the jit warmup
+            if self._positions(r) + r.max_new_tokens > self.scfg.max_len:
+                raise ValueError(f"request {r.uid} exceeds max_len")
+        if warmup:
+            self.warmup([r.prompt_len for r in reqs])
+        pending = deque(reqs)
+        self._t_start = time.perf_counter()
+        while pending or self.sched.n_waiting or self.slots.n_active:
+            now = self._now()
+            while pending and pending[0].arrival <= now:
+                self.submit(pending.popleft())
+            if self.static:
+                # fixed-batch baseline: admit only when the engine is idle
+                if self.slots.n_active == 0 and self.sched.n_waiting:
+                    take = [self.sched.queue.popleft()
+                            for _ in range(min(self.slots.n_slots,
+                                               self.sched.n_waiting))]
+                    bucket = self.sched.bucket_for(
+                        max(r.prompt_len for r in take))
+                    self._do_prefill(PrefillPlan(take, bucket))
+                    if all(r.done for r in self.slot_req.values()):
+                        for slot in list(self.slot_req):  # all max_new == 1
+                            self._release(slot)
+            else:
+                while self.slots.n_free and self.sched.n_waiting:
+                    plan = self.sched.plan_prefill(self.slots.n_free)
+                    self._do_prefill(plan)
+            if self.slots.n_active:
+                self._decode_tick()
+            elif pending:
+                time.sleep(min(1e-3, max(0.0, pending[0].arrival - now)))
+        self.report.wall_s = self._now()
+        return self._finalize(reqs)
+
+    def _finalize(self, reqs: Sequence[Request]) -> ServeReport:
+        rep = self.report
+        rep.n_requests = len(reqs)
+        rep.outputs = {r.uid: list(r.out_tokens) for r in reqs}
+        lat = [r.t_finish - r.arrival for r in reqs if r.t_finish is not None]
+        if lat:
+            rep.latency_p50_s = float(np.percentile(lat, 50))
+            rep.latency_p99_s = float(np.percentile(lat, 99))
+        if rep.decode_steps:
+            rep.mean_occupancy = self._occ_sum / rep.decode_steps
+        # first tokens come out of prefill; decode throughput counts the
+        # tokens the decode loop itself produced
+        decode_toks = rep.gen_tokens - rep.n_requests
+        if rep.decode_s > 0:
+            rep.decode_tok_s = decode_toks / rep.decode_s
+        if rep.prefill_s > 0:
+            rep.prefill_tok_s = rep.prefill_tokens / rep.prefill_s
+        total = rep.compile_s + rep.prefill_s + rep.decode_s
+        if total > 0:
+            rep.combined_tok_s = rep.gen_tokens / total
+        return rep
+
+
+def serve(cfg: ModelConfig, params: Pytree, requests: Sequence[Request],
+          scfg: ServeConfig, engine: str = "continuous", mesh=None,
+          warmup: bool = True) -> ServeReport:
+    """One-shot helper: build an engine, serve the workload, return the report."""
+    eng = ServeEngine(cfg, params, scfg, engine=engine, mesh=mesh)
+    return eng.run(requests, warmup=warmup)

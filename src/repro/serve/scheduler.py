@@ -1,0 +1,138 @@
+"""Admission queue + continuous-batching scheduler.
+
+Policy (see serve/README.md for the full table):
+
+- FCFS admission — requests are prefilled strictly in queue order (no
+  reordering, so no starvation); a shorter request behind a long one can
+  only ride along in the SAME prefill batch, padded up to its bucket.
+- Bucketed prefill — prompts are padded to a small fixed set of lengths
+  (powers of two by default) and the prefill batch dim is padded to a fixed
+  size with dump rows, so the number of jit recompiles is bounded by
+  ``len(buckets)`` regardless of the workload's length distribution.
+- Slot admission — a prefill is planned only for as many requests as there
+  are free slots; decode proceeds every engine tick for whatever slots are
+  active, and slots retire independently on EOS / max_new_tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+
+def default_buckets(max_prompt_len: int, min_bucket: int = 8) -> tuple[int, ...]:
+    """Powers of two from ``min_bucket`` up to (and covering) max_prompt_len."""
+    buckets = []
+    b = min_bucket
+    while b < max_prompt_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(b)
+    return tuple(buckets)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``tokens`` is the int prompt; ``patches`` carries
+    the precomputed vision-frontend embeddings for vlm archs (or None)."""
+    uid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    arrival: float = 0.0
+    patches: Optional[np.ndarray] = None
+    # filled in by the engine
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+    @property
+    def done(self) -> bool:
+        return self.t_finish is not None
+
+
+class PrefillPlan(NamedTuple):
+    requests: List[Request]
+    bucket_len: int         # padded token length for this prefill batch
+
+
+class Scheduler:
+    """FCFS admission queue producing bucketed prefill plans."""
+
+    def __init__(self, buckets: Sequence[int], max_prefill_batch: int = 4):
+        self.buckets = tuple(sorted(buckets))
+        self.max_prefill_batch = int(max_prefill_batch)
+        self.queue: Deque[Request] = deque()
+
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(
+            f"prompt length {prompt_len} exceeds the largest bucket "
+            f"{self.buckets[-1]}")
+
+    def submit(self, req: Request) -> None:
+        self.bucket_for(req.prompt_len)  # validate up front
+        self.queue.append(req)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.queue)
+
+    def plan_prefill(self, n_free_slots: int) -> Optional[PrefillPlan]:
+        """Pop up to min(free slots, max_prefill_batch) head-of-queue requests
+        into one padded prefill batch. The bucket is the head request's; later
+        requests join only if they fit it (FCFS — a long request is never
+        jumped, it just starts its own batch next call)."""
+        if not self.queue or n_free_slots <= 0:
+            return None
+        k = min(n_free_slots, self.max_prefill_batch)
+        bucket = self.bucket_for(self.queue[0].prompt_len)
+        taken: List[Request] = [self.queue.popleft()]
+        while self.queue and len(taken) < k and \
+                self.queue[0].prompt_len <= bucket:
+            taken.append(self.queue.popleft())
+        return PrefillPlan(requests=taken, bucket_len=bucket)
+
+
+def synth_workload(n_requests: int, vocab: int, *, seed: int = 0,
+                   prompt_lens: tuple[int, int] = (8, 32),
+                   gen_lens: tuple[int, int] = (4, 64),
+                   short_frac: float = 0.8,
+                   rate: float = 0.0,
+                   n_patches: int = 0, d_model: int = 0) -> List[Request]:
+    """Synthetic skewed-length workload shared by the launcher, the serve
+    benchmark and the tests.
+
+    Prompt lengths are uniform in ``prompt_lens``. Generation lengths are
+    SKEWED: a ``short_frac`` fraction draws from the bottom quarter of
+    ``gen_lens`` and the rest from the top quarter — the worst case for a
+    static batch, where every short request pays for the longest one.
+    ``rate`` > 0 gives Poisson arrivals (exponential inter-arrival gaps at
+    ``rate`` req/s); 0 means everything arrives at t = 0. ``n_patches`` > 0
+    attaches standard-normal vision-frontend embeddings of width d_model."""
+    rng = np.random.default_rng(seed)
+    lo_p, hi_p = prompt_lens
+    lo_g, hi_g = gen_lens
+    span = max(1, (hi_g - lo_g) // 4)
+    t = 0.0
+    reqs: List[Request] = []
+    for uid in range(n_requests):
+        if rate > 0:
+            t += float(rng.exponential(1.0 / rate))
+        short = rng.random() < short_frac
+        gen = (int(rng.integers(lo_g, lo_g + span + 1)) if short
+               else int(rng.integers(hi_g - span, hi_g + 1)))
+        plen = int(rng.integers(lo_p, hi_p + 1))
+        patches = (rng.standard_normal((n_patches, d_model)).astype(np.float32)
+                   if n_patches else None)
+        reqs.append(Request(
+            uid=uid, arrival=t, max_new_tokens=gen, patches=patches,
+            tokens=rng.integers(0, vocab, (plen,)).astype(np.int32)))
+    return reqs

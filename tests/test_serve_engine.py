@@ -1,0 +1,256 @@
+"""repro.serve: continuous-batching engine correctness.
+
+CPU-fast smoke configs (tiny models, short generations). The load-bearing
+properties:
+
+- exact right-padded prefill: the cache a padded slot prefill emits matches
+  an unpadded per-request prefill across every decode-capable mixer
+  (attention, sliding-window ring, SSM state, RG-LRU, MoE);
+- continuous vs static parity: same prompts, greedy decode → token-identical
+  outputs regardless of arrival order / slot count / slot assignment;
+- slot reuse: a freed slot's stale KV never leaks into the next request;
+- sampling: temperature=0 is deterministic argmax; temperature>0 is
+  deterministic given a seed and identical across engines / slot layouts.
+"""
+import copy
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, decode_step, init_lm, prefill
+from repro.serve import (Request, Scheduler, ServeConfig, ServeEngine,
+                         default_buckets, synth_workload)
+
+V = 64
+MAXLEN = 32
+
+CFGS = [
+    ModelConfig(name="dense", n_layers=2, d_model=32, n_heads=4, n_kv=2,
+                d_ff=64, vocab=V, qkv_bias=True),
+    ModelConfig(name="swa", n_layers=6, d_model=32, n_heads=4, n_kv=2,
+                d_ff=64, vocab=V, window=4, global_every=3),
+    ModelConfig(name="ssm", arch_type="ssm", n_layers=2, d_model=32,
+                n_heads=1, n_kv=1, d_ff=0, vocab=V, ssm_state=8,
+                ssm_head_dim=16, ssm_chunk=4),
+    ModelConfig(name="hyb", arch_type="hybrid", n_layers=6, d_model=32,
+                n_heads=4, n_kv=1, d_ff=64, vocab=V,
+                block_pattern=("rec", "rec", "local"), window=4, lru_width=32),
+    # generous capacity: MoE rows are independent only while nothing drops
+    ModelConfig(name="moe", arch_type="moe", n_layers=2, d_model=32,
+                n_heads=4, n_kv=4, d_ff=64, vocab=V, n_experts=4, top_k=2,
+                n_shared=1, d_expert=32, capacity_factor=8.0),
+]
+DENSE = CFGS[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _params(cfg_name: str):
+    cfg = next(c for c in CFGS if c.name == cfg_name)
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _fresh(reqs):
+    return [copy.deepcopy(r) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# exact right-padded prefill + per-slot decode, across all mixers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_padded_prefill_matches_unpadded(cfg):
+    cfg, params = _params(cfg.name)
+    dec = jax.jit(functools.partial(decode_step, cfg=cfg))
+    key = jax.random.PRNGKey(1)
+    lens = jnp.asarray([5, 11, 2], jnp.int32)
+    toks = jax.random.randint(key, (3, 16), 0, cfg.vocab)
+    # lens-prefill emits logits ONLY at each request's last real position
+    pl, cache = prefill(params, cfg, {"tokens": toks}, MAXLEN, lens=lens)
+    assert pl.shape == (3, 1, cfg.vocab)
+    for b in range(3):
+        L = int(lens[b])
+        rpl, rcache = prefill(params, cfg, {"tokens": toks[b:b + 1, :L]}, MAXLEN)
+        err = float(jnp.max(jnp.abs(pl[b, 0] - rpl[0, -1])))
+        assert err < 2e-3, (cfg.name, b, err)
+        # three decode steps: padded-batch per-slot pos vs scalar reference
+        tok = jnp.argmax(rpl[0, -1]).reshape(1, 1).astype(jnp.int32)
+        bc = cache
+        btoks = jnp.zeros((3, 1), jnp.int32).at[b].set(tok[0])
+        for _ in range(3):
+            rlog, rcache = dec(params, cache=rcache, tokens=tok)
+            blog, bc = dec(params, cache=bc, tokens=btoks)
+            err = float(jnp.max(jnp.abs(blog[b, 0] - rlog[0, 0])))
+            assert err < 2e-3, (cfg.name, b, err)
+            tok = jnp.argmax(rlog[:, 0], -1)[:, None].astype(jnp.int32)
+            btoks = jnp.zeros((3, 1), jnp.int32).at[b].set(tok[0])
+
+
+# ---------------------------------------------------------------------------
+# continuous vs static engine parity (greedy)
+# ---------------------------------------------------------------------------
+
+def _workload(n=8, seed=3, gen=(2, 6), prompt=(4, 12)):
+    return synth_workload(n, V, seed=seed, prompt_lens=prompt, gen_lens=gen,
+                          rate=0.0)
+
+
+def test_continuous_static_parity_greedy():
+    cfg, params = _params("dense")
+    reqs = _workload()
+    cont = ServeEngine(cfg, params,
+                       ServeConfig(n_slots=3, max_len=MAXLEN,
+                                   max_prefill_batch=2)).run(_fresh(reqs))
+    stat = ServeEngine(cfg, params,
+                       ServeConfig(n_slots=len(reqs), max_len=MAXLEN),
+                       engine="static").run(_fresh(reqs))
+    assert cont.outputs == stat.outputs
+    for r in reqs:
+        assert len(cont.outputs[r.uid]) == r.max_new_tokens
+    assert cont.decode_steps > 0 and cont.gen_tokens > 0
+
+
+def test_arrival_order_and_slot_count_invariance():
+    cfg, params = _params("dense")
+    reqs = _workload()
+    ref = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=4, max_len=MAXLEN,
+                                  max_prefill_batch=3)).run(_fresh(reqs))
+    # reversed submission order, different slot count / prefill packing
+    rev = _fresh(reqs)[::-1]
+    out = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN,
+                                  max_prefill_batch=1)).run(rev)
+    assert ref.outputs == out.outputs
+
+
+def test_static_engine_short_pays_for_long():
+    """The static baseline cannot retire slots: with one long request in the
+    batch, its decode step count is the long request's generation length."""
+    cfg, params = _params("dense")
+    reqs = [Request(uid=0, tokens=np.arange(4, dtype=np.int32) % V,
+                    max_new_tokens=2),
+            Request(uid=1, tokens=np.arange(6, dtype=np.int32) % V,
+                    max_new_tokens=12)]
+    stat = ServeEngine(cfg, params, ServeConfig(n_slots=2, max_len=MAXLEN),
+                       engine="static").run(_fresh(reqs))
+    assert stat.decode_steps == 11          # 12 tokens: 1 prefill + 11 decodes
+    assert stat.mean_occupancy < 1.0        # the short request idles its slot
+
+
+# ---------------------------------------------------------------------------
+# slot reuse
+# ---------------------------------------------------------------------------
+
+def test_slot_reuse_no_stale_kv_leak():
+    """Serve through ONE slot (maximal reuse) and compare per-request outputs
+    against isolated single-request engines."""
+    cfg, params = _params("swa")        # ring buffers are the risky case
+    reqs = _workload(n=4, seed=9)
+    shared = ServeEngine(cfg, params,
+                         ServeConfig(n_slots=1, max_len=MAXLEN,
+                                     max_prefill_batch=1)).run(_fresh(reqs))
+    for r in reqs:
+        solo = ServeEngine(cfg, params,
+                           ServeConfig(n_slots=1, max_len=MAXLEN,
+                                       max_prefill_batch=1)).run(_fresh([r]))
+        assert shared.outputs[r.uid] == solo.outputs[r.uid], r.uid
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_temperature0_is_deterministic_argmax():
+    cfg, params = _params("dense")
+    reqs = _workload(n=4)
+    scfg = ServeConfig(n_slots=2, max_len=MAXLEN, temperature=0.0, seed=0)
+    a = ServeEngine(cfg, params, scfg).run(_fresh(reqs))
+    b = ServeEngine(cfg, params, scfg).run(_fresh(reqs))
+    assert a.outputs == b.outputs
+    # temperature=0 ignores the seed entirely
+    c = ServeEngine(cfg, params,
+                    ServeConfig(n_slots=2, max_len=MAXLEN, temperature=0.0,
+                                seed=123)).run(_fresh(reqs))
+    assert a.outputs == c.outputs
+
+
+def test_sampling_seeded_and_engine_invariant():
+    """temperature>0: deterministic given the seed, identical across engines
+    and slot layouts (keys bind to request uid + token index, not slots),
+    and different seeds actually change the streams."""
+    cfg, params = _params("dense")
+    reqs = _workload(n=6, gen=(3, 6))
+    kw = dict(max_len=MAXLEN, temperature=0.7, top_k=8, seed=11)
+    a = ServeEngine(cfg, params,
+                    ServeConfig(n_slots=2, max_prefill_batch=1, **kw)
+                    ).run(_fresh(reqs))
+    b = ServeEngine(cfg, params, ServeConfig(n_slots=6, **kw),
+                    engine="static").run(_fresh(reqs))
+    assert a.outputs == b.outputs
+    other = ServeEngine(cfg, params,
+                        ServeConfig(n_slots=2, max_len=MAXLEN,
+                                    temperature=0.7, top_k=8, seed=12)
+                        ).run(_fresh(reqs))
+    assert other.outputs != a.outputs
+
+
+def test_top_k_one_is_greedy():
+    cfg, params = _params("dense")
+    reqs = _workload(n=3)
+    greedy = ServeEngine(cfg, params,
+                         ServeConfig(n_slots=3, max_len=MAXLEN)
+                         ).run(_fresh(reqs))
+    k1 = ServeEngine(cfg, params,
+                     ServeConfig(n_slots=3, max_len=MAXLEN, temperature=0.5,
+                                 top_k=1, seed=4)).run(_fresh(reqs))
+    assert greedy.outputs == k1.outputs
+
+
+# ---------------------------------------------------------------------------
+# scheduler / engine plumbing
+# ---------------------------------------------------------------------------
+
+def test_scheduler_buckets_and_fcfs():
+    sched = Scheduler(buckets=(8, 16, 32), max_prefill_batch=4)
+    assert sched.bucket_for(5) == 8 and sched.bucket_for(9) == 16
+    with pytest.raises(ValueError):
+        sched.bucket_for(33)
+    mk = lambda uid, L: Request(uid=uid, tokens=np.zeros(L, np.int32),
+                                max_new_tokens=1)
+    for r in [mk(0, 6), mk(1, 8), mk(2, 20), mk(3, 4)]:
+        sched.submit(r)
+    plan = sched.plan_prefill(n_free_slots=4)
+    # head bucket is 8; request 2 (bucket 32) blocks the pack, FCFS keeps it
+    assert [r.uid for r in plan.requests] == [0, 1]
+    assert plan.bucket_len == 8
+    plan = sched.plan_prefill(n_free_slots=4)
+    assert [r.uid for r in plan.requests] == [2, 3]
+    assert plan.bucket_len == 32
+
+
+def test_default_buckets_cover_and_bound_recompiles():
+    bs = default_buckets(100)
+    assert bs[-1] >= 100 and len(bs) <= 6
+
+
+def test_engine_rejects_oversized_requests():
+    cfg, params = _params("dense")
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=1, max_len=16))
+    with pytest.raises(ValueError):
+        eng.submit(Request(uid=0, tokens=np.zeros(10, np.int32),
+                           max_new_tokens=10))
+
+
+def test_report_timing_split():
+    """compile/prefill/decode are reported separately and all non-trivial."""
+    cfg, params = _params("dense")
+    rep = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN)
+                      ).run(_fresh(_workload(n=3)))
+    assert rep.compile_s > 0 and rep.prefill_s > 0 and rep.decode_s > 0
+    assert rep.compile_s > rep.prefill_s  # jit compiles dwarf tiny-model math
+    assert rep.decode_tok_s > 0 and rep.combined_tok_s > 0
+    assert 0 < rep.mean_occupancy <= 1.0
