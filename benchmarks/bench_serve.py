@@ -1,6 +1,19 @@
-"""Serve-path A/B benchmark: static fixed-batch vs continuous-batching decode
-on a skewed-length workload (short requests pay for the longest one in a
-static batch; continuous retires and backfills slots independently).
+"""Serve-path A/B benchmarks on a skewed-length workload.
+
+Two A/Bs share one workload and one set of jitted steps:
+
+- static fixed-batch vs continuous-batching decode (short requests pay for
+  the longest one in a static batch; continuous retires and backfills slots
+  independently);
+- dense vs PAGED slot cache (a dense slot pins ``max_len`` KV rows per
+  global layer however short the request; the block-table paged cache pins
+  only ``ceil((prompt + gen) / page_size)`` pages — serve/cache.py), with
+  the HBM-per-request accounting from ``slot_hbm_bytes`` recorded next to
+  the decode throughput so the memory win is visible at equal tok/s.
+
+Greedy outputs are asserted token-identical across ALL four engine×layout
+combinations before any number is reported — a perf/memory figure from
+diverging outputs would be meaningless.
 
 Rows follow the orchestrator's ``name,value,derived`` convention; every
 ``serve_*`` row is also persisted to ``BENCH_serve.json`` by benchmarks/run.py
@@ -14,7 +27,7 @@ import jax
 
 from repro.configs import smoke_config
 from repro.models.lm import init_lm
-from repro.serve import ServeConfig, ServeEngine, synth_workload
+from repro.serve import ServeConfig, ServeEngine, slot_hbm_bytes, synth_workload
 
 
 def _run_pair(cfg, params, workload, scfg):
@@ -34,18 +47,29 @@ def _run_pair(cfg, params, workload, scfg):
 def run(full: bool = False, smoke: bool = False) -> list[str]:
     n_requests, slots = (32, 8) if smoke else (64, 8)
     gen_max = 64          # the skewed 4..64 workload from the acceptance spec
+    page_size = 16
+    max_len = 32 + gen_max
     cfg = smoke_config("qwen2-1.5b")
     params = init_lm(jax.random.PRNGKey(0), cfg)
     workload = synth_workload(
         n_requests, cfg.vocab, seed=0, prompt_lens=(8, 32),
         gen_lens=(4, gen_max), short_frac=0.8, rate=0.0)
-    scfg = ServeConfig(n_slots=slots, max_len=32 + gen_max,
-                       max_prefill_batch=4)
-    reports = _run_pair(cfg, params, workload, scfg)
-    s, c = reports["static"], reports["continuous"]
+    dense_cfg = ServeConfig(n_slots=slots, max_len=max_len,
+                            max_prefill_batch=4)
+    paged_cfg = ServeConfig(n_slots=slots, max_len=max_len,
+                            max_prefill_batch=4, paged=True,
+                            page_size=page_size)
+    dense = _run_pair(cfg, params, workload, dense_cfg)
+    paged = _run_pair(cfg, params, workload, paged_cfg)
+    # continuous-vs-static parity is pinned inside each pair; pin the
+    # dense-vs-paged layouts against each other too
+    for uid, toks in dense["continuous"].outputs.items():
+        assert paged["continuous"].outputs[uid] == toks, \
+            f"dense/paged divergence on request {uid}"
+    s, c, p = dense["static"], dense["continuous"], paged["continuous"]
 
     rows = []
-    for tag, rep in (("static", s), ("continuous", c)):
+    for tag, rep in (("static", s), ("continuous", c), ("paged", p)):
         rows += [
             f"serve_{tag}_decode_tok_s,{rep.decode_tok_s:.1f},"
             f"decode_s={rep.decode_s:.3f};steps={rep.decode_steps}",
@@ -61,6 +85,24 @@ def run(full: bool = False, smoke: bool = False) -> list[str]:
         f"serve_speedup_decode,{speedup:.2f},"
         f"continuous/static decode tok/s on skewed gen 4..{gen_max} "
         f"({n_requests} reqs, {slots} slots)")
+
+    # ---- dense vs paged memory accounting (HBM bytes one request pins) ----
+    dense_req = slot_hbm_bytes(cfg, max_len)
+    paged_req = slot_hbm_bytes(
+        cfg, max_len, kv_rows=int(p.mean_pages_per_req * page_size))
+    assert paged_req <= dense_req, (paged_req, dense_req)
+    ratio = p.decode_tok_s / c.decode_tok_s if c.decode_tok_s else 0.0
+    rows += [
+        f"serve_dense_hbm_per_req_kb,{dense_req / 1024:.1f},"
+        f"max_len={max_len} rows per global layer",
+        f"serve_paged_hbm_per_req_kb,{paged_req / 1024:.1f},"
+        f"mean_pages={p.mean_pages_per_req:.2f};page_size={page_size};"
+        f"saving={1.0 - paged_req / dense_req:.2f}",
+        f"serve_paged_page_occupancy,{p.mean_page_occupancy:.3f},"
+        f"pool={p.n_pages} pages",
+        f"serve_paged_vs_dense_tok_ratio,{ratio:.2f},"
+        f"paged/dense continuous decode tok/s (1.0 = equal)",
+    ]
     return rows
 
 

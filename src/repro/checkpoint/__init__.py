@@ -1,1 +1,2 @@
+"""Dependency-free numpy pytree checkpointing (save / restore / latest)."""
 from .np_checkpoint import latest_step, restore_pytree, save_pytree  # noqa: F401

@@ -1,3 +1,4 @@
+"""Synthetic data: classification / LM / per-worker batch generators."""
 from .synthetic import (  # noqa: F401
     classification_batches,
     lm_batches,

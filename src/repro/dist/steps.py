@@ -361,19 +361,33 @@ def sample_next(row_logits: Array, req_keys: Array, token_idx: Array,
 
 
 def make_decode_slots_step(cfg: ModelConfig, temperature: float = 0.0,
-                           top_k: int = 0):
-    """step(params, cache, tokens, req_keys, gen_idx) -> (next_tokens, cache).
+                           top_k: int = 0, paged: bool = False):
+    """step(params, cache, tokens, req_keys, gen_idx[, page_table])
+    -> (next_tokens, cache).
 
     One continuous-batching decode step over all S slots: ``cache["pos"]`` is
     the per-slot (S,) position vector, so slots at different depths decode in
     the same call. ``tokens`` (S, 1) int32 are the slots' current tokens;
     ``req_keys`` (S, 2) uint32 per-slot request PRNG keys and ``gen_idx``
     (S,) int32 per-slot generated-token indices drive sampling (ignored when
-    temperature <= 0 — pass zeros). Callers donate the cache
-    (``donate_argnums=(1,)``). Inactive slots decode garbage that the engine
-    discards host-side; their rows never influence active slots (every op is
-    row-independent; MoE capacity coupling is the documented exception —
-    see serve/README.md)."""
+    temperature <= 0 — pass zeros). With ``paged=True`` the step takes the
+    (S+1, pages_per_slot) int32 block table as a trailing argument and the
+    cache is the paged layout (serve/cache.py); free slots' table rows point
+    at the dump page, so their writes land in garbage. Callers donate the
+    cache (``donate_argnums=(1,)``). Inactive slots decode garbage that the
+    engine discards host-side; their rows never influence active slots
+    (every op is row-independent; MoE capacity coupling is the documented
+    exception — see serve/README.md)."""
+
+    if paged:
+        def step(params, cache: dict, tokens: Array, req_keys: Array,
+                 gen_idx: Array, page_table: Array):
+            logits, cache = decode_step(params, cfg, cache, tokens,
+                                        page_table=page_table)
+            nxt = sample_next(logits[:, 0], req_keys, gen_idx, temperature,
+                              top_k)
+            return nxt, cache
+        return step
 
     def step(params, cache: dict, tokens: Array, req_keys: Array,
              gen_idx: Array):

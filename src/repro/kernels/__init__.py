@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots (see kernels/README.md).
+
+Public entry points live in ``ops.py`` (jit'd wrappers with ``use_pallas`` /
+``interpret`` switches); ``ref.py`` holds the pure-jnp oracles every kernel
+is swept against in tests/test_kernels.py.
+"""

@@ -30,7 +30,7 @@ from .wcwmed import wcwmed_pallas, wcwmed_padded
 from .wreduce import gm_step_padded, sqdist_pallas, wcomb_padded, wcomb_pallas
 from .wctma_fused import (DEFAULT_BLOCK_D as FUSED_BLOCK_D, trim_weights,
                           wctma_fused)
-from .swa import swa_decode_pallas
+from .swa import paged_decode_pallas, swa_decode_pallas
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -143,10 +143,21 @@ def make_kernel_aggregator(spec: str, lam: float = 0.0, *,
 
 def swa_decode(q, k_cache, v_cache, pos, *, local: bool,
                use_pallas: bool = True, interpret: bool = True):
-    """Flash single-token decode over a (ring) KV cache."""
+    """Flash single-token decode over a (ring) KV cache; ``pos`` scalar or
+    (B,) per-slot."""
     if not use_pallas:
         return ref.swa_decode_ref(q, k_cache, v_cache, pos, local=local)
     return swa_decode_pallas(q, k_cache, v_cache, pos, local=local, interpret=interpret)
+
+
+def paged_decode(q, k_pool, v_pool, page_table, pos, *,
+                 use_pallas: bool = True, interpret: bool = True):
+    """Per-slot paged flash decode over a block-table KV page pool (global
+    causal layers; see serve/cache.py for the pool/table layout)."""
+    if not use_pallas:
+        return ref.paged_decode_ref(q, k_pool, v_pool, page_table, pos)
+    return paged_decode_pallas(q, k_pool, v_pool, page_table, pos,
+                               interpret=interpret)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, chunk: int, *, use_pallas: bool = True,

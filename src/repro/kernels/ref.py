@@ -39,17 +39,39 @@ def wctma_ref(x: jnp.ndarray, s: jnp.ndarray, lam: float) -> jnp.ndarray:
 
 def swa_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                    pos: jnp.ndarray, *, local: bool) -> jnp.ndarray:
-    """Mirror of models.layers.attention_decode's masked SDPA (post-rope)."""
+    """Mirror of models.layers.attention_decode's masked SDPA (post-rope).
+
+    ``pos`` may be a scalar (shared depth) or a (B,) vector (per-slot)."""
     B, H, hd = q.shape
     W = k_cache.shape[1]
     idx = jnp.arange(W)
+    pos = jnp.asarray(pos)
+    pb = pos[:, None] if pos.ndim else pos            # (B, 1) | ()
     if local:
-        valid = (idx <= pos % W) | (pos >= W)
+        valid = (idx <= pb % W) | (pb >= W)
     else:
-        valid = idx <= pos
+        valid = idx <= pb
+    mask = (valid[:, None, None, :] if pos.ndim
+            else valid[None, None, None, :])
     cfg = ModelConfig(n_heads=H, n_kv=k_cache.shape[2], head_dim=hd)
-    out = _sdpa(cfg, q[:, None], k_cache, v_cache, valid[None, None, None, :])
+    out = _sdpa(cfg, q[:, None], k_cache, v_cache, mask)
     return out.reshape(B, H, hd).astype(jnp.float32)
+
+
+def paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                     page_table: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Paged decode oracle: gather each slot's pages into a dense per-slot KV
+    via the block table, then the same causal-prefix masked SDPA. q: (S, H,
+    hd); pools (n_pages + 1, P, KV, hd); page_table (≥S, pps); pos (S,)."""
+    S, H, hd = q.shape
+    _, P, KV, _ = k_pool.shape
+    pages = page_table[:S]                             # (S, pps)
+    kg = k_pool[pages].reshape(S, -1, KV, hd)          # (S, pps*P, KV, hd)
+    vg = v_pool[pages].reshape(S, -1, KV, hd)
+    valid = jnp.arange(kg.shape[1])[None, :] <= pos[:, None]
+    cfg = ModelConfig(n_heads=H, n_kv=KV, head_dim=hd)
+    out = _sdpa(cfg, q[:, None], kg, vg, valid[:, None, None, :])
+    return out.reshape(S, H, hd).astype(jnp.float32)
 
 
 def ssd_ref(x, dt, A, Bm, Cm, chunk):

@@ -1,15 +1,27 @@
-"""Pallas TPU kernel: flash attention for single-token decode over a
-(sliding-window) KV cache.
+"""Pallas TPU kernels: flash attention for single-token decode over a
+(sliding-window) KV cache — dense per-slot and paged (block-table) variants.
 
-Grid = (batch·kv_head, cache_blocks). The KV cache streams through VMEM one
-(bw, hd) block per grid step while the online-softmax state (running max,
-denominator, accumulator) lives in VMEM scratch that persists across the
-sequential TPU grid — the working set is O(G·hd + bw·hd) regardless of cache
-length. This is the long_500k decode hot loop for gemma-style local layers
-and recurrentgemma attention blocks.
+Dense (``swa_decode_pallas``): grid = (batch·kv_head, cache_blocks). The KV
+cache streams through VMEM one (bw, hd) block per grid step while the
+online-softmax state (running max, denominator, accumulator) lives in VMEM
+scratch that persists across the sequential TPU grid — the working set is
+O(G·hd + bw·hd) regardless of cache length. ``pos`` may be a scalar (classic
+batched decode) or a (B,) vector (slot-mapped serving: every row decodes at
+its own absolute depth). This is the long_500k decode hot loop for
+gemma-style local layers and recurrentgemma attention blocks.
 
-Ring-buffer semantics: slot validity is derived from the absolute position
-``pos`` exactly as in the reference (`repro.models.layers.attention_decode`).
+Paged (``paged_decode_pallas``): grid = (slot·kv_head, pages-of-that-slot).
+The KV lives in a fixed page pool ``(n_pages + 1, page_size, KV, hd)`` and a
+per-slot block table maps logical pages to physical ones; the table and the
+per-slot ``pos`` ride in as scalar-prefetch arguments so the BlockSpec index
+map can gather each slot's next physical page for DMA (vLLM-style paged
+attention). The online-softmax scratch is carried across the sequential page
+axis exactly as in the dense kernel. Unallocated logical pages point at the
+pool's last (dump) page; their positions exceed ``pos`` and are masked out.
+
+Ring-buffer semantics (dense, ``local=True``): slot validity is derived from
+the absolute position ``pos`` exactly as in the reference
+(`repro.models.layers.attention_decode`).
 """
 from __future__ import annotations
 
@@ -23,29 +35,22 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_W = 256
 
 
-def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, W: int, bw: int, local: bool):
-    c = pl.program_id(1)
-    nc = pl.num_programs(1)
-    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
-    hd = q.shape[-1]
-    pos = pos_ref[0]
-    scale = hd ** -0.5
+def _flash_step(step, q, k, v, valid, o_ref, m_ref, l_ref, acc_ref):
+    """One online-softmax block step, shared by the dense and paged kernels.
 
-    @pl.when(c == 0)
+    ``step`` is the sequential block index (init at 0, emit at the last —
+    the TPU grid revisits the same scratch across it); ``valid`` masks this
+    block's key columns. q: (G, hd) f32; k/v: (bk, hd) f32."""
+    nsteps = pl.num_programs(1)
+    scale = q.shape[-1] ** -0.5
+
+    @pl.when(step == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, -1e30)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    k = k_ref[0].astype(jnp.float32)                  # (bw, hd)
-    v = v_ref[0].astype(jnp.float32)
-    scores = (q @ k.T) * scale                        # (G, bw)
-    idx = c * bw + jax.lax.iota(jnp.int32, bw)
-    if local:
-        valid = (idx <= pos % W) | (pos >= W)         # ring buffer occupancy
-    else:
-        valid = idx <= pos                            # causal prefix
+    scores = (q @ k.T) * scale                        # (G, bk)
     scores = jnp.where(valid[None, :], scores, -1e30)
 
     m_prev = m_ref[...]
@@ -58,19 +63,38 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     m_ref[...] = m_new
     l_ref[...] = l_new
 
-    @pl.when(c == nc - 1)
+    @pl.when(step == nsteps - 1)
     def _finish():
         o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, W: int, bw: int, local: bool):
+    c = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    pos = pos_ref[0]
+    k = k_ref[0].astype(jnp.float32)                  # (bw, hd)
+    v = v_ref[0].astype(jnp.float32)
+    idx = c * bw + jax.lax.iota(jnp.int32, bw)
+    if local:
+        valid = (idx <= pos % W) | (pos >= W)         # ring buffer occupancy
+    else:
+        valid = idx <= pos                            # causal prefix
+    _flash_step(c, q, k, v, valid, o_ref, m_ref, l_ref, acc_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("local", "block_w", "interpret"))
 def swa_decode_pallas(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                       pos: jnp.ndarray, *, local: bool, block_w: int = DEFAULT_BLOCK_W,
                       interpret: bool = True) -> jnp.ndarray:
-    """q: (B, H, hd); k/v_cache: (B, W, KV, hd); pos: () int32 -> (B, H, hd).
+    """q: (B, H, hd); k/v_cache: (B, W, KV, hd); pos: () or (B,) int32
+    -> (B, H, hd).
 
-    Keys/values are assumed already rotary-embedded (cache layout identical to
-    the reference decode path)."""
+    A scalar ``pos`` is the classic shared-depth batched decode; a (B,)
+    vector is the slot-mapped serving form — each batch row attends at its
+    own absolute position (the BlockSpec index map routes row b's pos to all
+    of its kv-head grid rows). Keys/values are assumed already
+    rotary-embedded (cache layout identical to the reference decode path)."""
     B, H, hd = q.shape
     _, W, KV, _ = k_cache.shape
     G = H // KV
@@ -79,13 +103,13 @@ def swa_decode_pallas(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray
     qg = q.reshape(B * KV, G, hd)
     kg = jnp.moveaxis(k_cache, 2, 1).reshape(B * KV, W, hd)
     vg = jnp.moveaxis(v_cache, 2, 1).reshape(B * KV, W, hd)
-    pos_arr = jnp.broadcast_to(pos.astype(jnp.int32), (1,))
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
 
     out = pl.pallas_call(
         functools.partial(_kernel, W=W, bw=bw, local=local),
         grid=(B * KV, W // bw),
         in_specs=[
-            pl.BlockSpec((1,), lambda g, c: (0,)),
+            pl.BlockSpec((1,), lambda g, c: (g // KV,)),
             pl.BlockSpec((1, G, hd), lambda g, c: (g, 0, 0)),
             pl.BlockSpec((1, bw, hd), lambda g, c: (g, c, 0)),
             pl.BlockSpec((1, bw, hd), lambda g, c: (g, c, 0)),
@@ -100,3 +124,69 @@ def swa_decode_pallas(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray
         interpret=interpret,
     )(pos_arr, qg, kg, vg)
     return out.reshape(B, H, hd)
+
+
+def _paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, P: int, KV: int):
+    g = pl.program_id(0)
+    j = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    pos = pos_ref[g // KV]
+    k = k_ref[0, :, 0].astype(jnp.float32)            # (P, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    idx = j * P + jax.lax.iota(jnp.int32, P)
+    valid = idx <= pos                                # causal prefix
+    _flash_step(j, q, k, v, valid, o_ref, m_ref, l_ref, acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                        pos: jnp.ndarray, *, interpret: bool = True
+                        ) -> jnp.ndarray:
+    """Per-slot paged flash decode for global (causal-prefix) layers.
+
+    q: (S, H, hd); k/v_pool: (n_pages + 1, P, KV, hd) — physical page pools
+    whose LAST page is the dump page; page_table: (≥S, pages_per_slot) int32
+    mapping each slot's logical pages to physical ones (unallocated entries
+    point at the dump page); pos: (S,) int32 per-slot absolute position.
+    Returns (S, H, hd) float32.
+
+    The table and pos are scalar-prefetch operands: the k/v BlockSpec index
+    maps read ``page_table[slot, j]`` to choose which physical page block to
+    stream next, so the kernel touches exactly the pages the block table
+    names. Positions past ``pos`` (including every row of an unallocated /
+    dump page) are masked in the online softmax."""
+    S, H, hd = q.shape
+    _, P, KV, _ = k_pool.shape
+    G = H // KV
+    pps = page_table.shape[1]
+    qg = q.reshape(S * KV, G, hd)
+    tbl = jnp.asarray(page_table, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32)
+
+    def page_map(g, j, tbl_ref, pos_ref):
+        return (tbl_ref[g // KV, j], 0, g % KV, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S * KV, pps),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda g, j, t, p: (g, 0, 0)),
+            pl.BlockSpec((1, P, 1, hd), page_map),
+            pl.BlockSpec((1, P, 1, hd), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda g, j, t, p: (g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max
+            pltpu.VMEM((G, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((G, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, P=P, KV=KV),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S * KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(tbl, pos_arr, qg, k_pool, v_pool)
+    return out.reshape(S, H, hd)

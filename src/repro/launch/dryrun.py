@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
-
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on the
 production meshes (16×16 single pod; 2×16×16 multi-pod) without allocating a
 single parameter, and extract the roofline terms from the compiled artifact.
@@ -10,7 +7,17 @@ single parameter, and extract the roofline terms from the compiled artifact.
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --robust
 
 Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>[__robust].json.
+
+IMPORT TRAP: importing this module forces XLA_FLAGS to a 512-device host
+platform BEFORE jax initializes — import nothing from here in code that
+should see the real backend (the collective_bytes parser lives in
+repro.utils for exactly this reason).
 """
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
 import argparse
 import json
 import time

@@ -5,6 +5,12 @@ lengths.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --requests 16 --engine both --rate 50 --gen-max 32
 
+``--paged`` swaps the dense slot cache for the block-table paged KV cache
+(``--page-size`` rows per page, ``--pages`` physical pool pages; 0 sizes the
+pool at dense-equivalent capacity), so cache HBM scales with actual request
+lengths and admission is page-budgeted — see serve/README.md for the layout
+and memory accounting.
+
 Timings are reported split into compile (jit warmup), prefill and decode —
 the old single tokens/s figure folded all three together (including compile
 time) and is kept as ``combined_tok_s`` for back-compat.
@@ -31,6 +37,12 @@ def _log_report(rep) -> None:
         rep.prefill_tok_s, rep.decode_s, rep.decode_tok_s,
         rep.mean_occupancy, rep.combined_tok_s, rep.latency_p50_s,
         rep.latency_p99_s)
+    if rep.paged:
+        logger.info(
+        "[%s] paged cache: %d pages x %d rows | page occupancy %.2f | "
+        "%.1f pages/request",
+        rep.engine, rep.n_pages, rep.page_size, rep.mean_page_occupancy,
+        rep.mean_pages_per_req)
 
 
 def main(argv=None) -> dict:
@@ -52,6 +64,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-table paged KV cache (serve/cache.py)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per page (with --paged)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="physical pool pages; 0 = dense-equivalent capacity")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -71,7 +89,8 @@ def main(argv=None) -> dict:
         n_slots=args.slots, max_len=max_len,
         max_prefill_batch=args.prefill_batch,
         temperature=args.temperature, top_k=args.top_k,
-        eos_id=args.eos_id, seed=args.seed)
+        eos_id=args.eos_id, seed=args.seed,
+        paged=args.paged, page_size=args.page_size, n_pages=args.pages)
 
     engines = (["continuous", "static"] if args.engine == "both"
                else [args.engine])

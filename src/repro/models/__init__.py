@@ -1,3 +1,5 @@
+"""Model zoo: unified ModelConfig + decoder-LM assembly (dense / MoE / SSM /
+griffin hybrids / encoder / vlm) with forward, prefill and decode modes."""
 from .config import ModelConfig  # noqa: F401
 from .lm import (  # noqa: F401
     decode_step,

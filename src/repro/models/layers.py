@@ -153,10 +153,9 @@ def attention_decode(p: dict, cfg: ModelConfig, x: Array, kind: str,
     else:
         k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
         v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
-    if cfg.use_pallas_decode and W % 128 == 0 and not per_slot:
-        # flash-decode kernel: streams the cache through VMEM once
-        # (per-slot flash decode is an open ROADMAP item — falls through to
-        # the masked SDPA below when pos carries a batch dim)
+    if cfg.use_pallas_decode and W % min(128, W) == 0:
+        # flash-decode kernel: streams the cache through VMEM once; handles
+        # scalar AND per-slot (B,) pos (the index map routes each row's pos)
         from repro.kernels.swa import swa_decode_pallas
         out = swa_decode_pallas(q[:, 0], k_cache, v_cache, pos,
                                 local=(kind == "local"),
@@ -175,6 +174,50 @@ def attention_decode(p: dict, cfg: ModelConfig, x: Array, kind: str,
         mask = valid[:, None, None, :] if per_slot else valid[None, None, None, :]
         out = _sdpa(cfg, q, k_cache, v_cache, mask)
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+def attention_decode_paged(p: dict, cfg: ModelConfig, x: Array,
+                           k_pool: Array, v_pool: Array, page_table: Array,
+                           pos: Array) -> tuple[Array, Array, Array]:
+    """Single-token decode against a paged (block-table) KV pool — the serve
+    path for global/full-attention layers (local layers keep the dense ring:
+    their cache already scales with ``window``, not ``max_len``).
+
+    x: (S, 1, d) — one row per SLOT. k/v_pool: (n_pages + 1, page_size, KV,
+    hd) physical page pools whose last page is the dump page. page_table:
+    (≥S, pages_per_slot) int32 — each slot's logical→physical page map, with
+    unallocated entries (and every entry of a free slot's row) pointing at
+    the dump page. pos: (S,) int32 per-slot absolute position. The new KV is
+    scattered into page ``pos // page_size`` row ``pos % page_size``; free
+    slots land on the dump page. Returns (out, k_pool, v_pool)."""
+    S = x.shape[0]
+    P = k_pool.shape[1]
+    pps = page_table.shape[1]
+    q, k, v = _qkv(p, cfg, x)
+    pos = jnp.asarray(pos)
+    cos, sin = rope_angles(pos[:, None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # free slots can run pos past the table span; the clamp is safe because
+    # their table rows are all dump — active slots never exceed their pages
+    lp = jnp.minimum(pos // P, pps - 1)
+    phys = page_table[jnp.arange(S), lp]
+    off = pos % P
+    k_pool = k_pool.at[phys, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v[:, 0].astype(v_pool.dtype))
+    if cfg.use_pallas_decode:
+        from repro.kernels.swa import paged_decode_pallas
+        out = paged_decode_pallas(q[:, 0], k_pool, v_pool, page_table, pos,
+                                  interpret=cfg.pallas_interpret)
+        out = out.reshape(S, 1, -1).astype(x.dtype)
+    else:
+        # jnp oracle: gather the slot's pages dense, then masked SDPA
+        pages = page_table[:S]                            # (S, pps)
+        kg = k_pool[pages].reshape(S, pps * P, cfg.n_kv, cfg.hd)
+        vg = v_pool[pages].reshape(S, pps * P, cfg.n_kv, cfg.hd)
+        valid = jnp.arange(pps * P)[None, :] <= pos[:, None]
+        out = _sdpa(cfg, q, kg, vg, valid[:, None, None, :])
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), k_pool, v_pool
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .griffin import init_lru_cache, init_rglru, rglru_block, rglru_decode
-from .layers import attention, attention_decode, init_attention, init_mlp, make_mask, mlp, rms_norm, rope_angles, apply_rope, _qkv, _sdpa
+from .layers import attention, attention_decode, attention_decode_paged, init_attention, init_mlp, make_mask, mlp, rms_norm, rope_angles, apply_rope, _qkv, _sdpa
 from .moe import init_moe, moe_block
 from .ssm import init_ssm, init_ssm_cache, ssm_block, ssm_decode
 
@@ -286,7 +286,7 @@ def _rec_prefill(p, cfg, x, lens=None):
     return out, LRUCache(conv=conv_cache, h=h_last)
 
 
-def _layer_decode(lp, cfg, kind, x, cache, pos):
+def _layer_decode(lp, cfg, kind, x, cache, pos, page_table=None):
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     if kind == "ssm":
         out, cache = ssm_decode(lp["mix"], cfg, h, cache)
@@ -296,7 +296,12 @@ def _layer_decode(lp, cfg, kind, x, cache, pos):
         x = x + out
     else:
         kc, vc = cache
-        out, kc, vc = attention_decode(lp["mix"], cfg, h, kind, kc, vc, pos)
+        if page_table is not None and kind != "local":
+            # paged serve path: kc/vc are page pools, not per-slot rows
+            out, kc, vc = attention_decode_paged(lp["mix"], cfg, h, kc, vc,
+                                                 page_table, pos)
+        else:
+            out, kc, vc = attention_decode(lp["mix"], cfg, h, kind, kc, vc, pos)
         cache = (kc, vc)
         x = x + out
     h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -462,13 +467,17 @@ def prefill(params: Pytree, cfg: ModelConfig, batch: dict, max_len: int,
     return logits_from_hidden(params, cfg, x), cache
 
 
-def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array
-                ) -> tuple[Array, dict]:
+def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array,
+                page_table: Optional[Array] = None) -> tuple[Array, dict]:
     """One decode step. tokens: (B, 1) int32. Returns (logits (B,1,V), cache).
 
     ``cache["pos"]`` may be a scalar (one shared depth — the classic batched
     path) or a (B,) vector (slot-mapped serving: every row decodes at its own
-    absolute position; see repro.serve)."""
+    absolute position; see repro.serve). With ``page_table`` ((≥B,
+    pages_per_slot) int32) the cache is the PAGED serve layout: global/full
+    attention leaves are block-table page pools (serve/cache.py
+    ``init_paged_cache``) and each slot's KV is gathered through its table
+    row; local ring, SSM and RG-LRU leaves stay per-slot."""
     dtype = jnp.dtype(cfg.dtype)
     pos = cache["pos"]
     x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, dtype)
@@ -478,7 +487,7 @@ def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array
     if prefix:
         cps = []
         for lp, kind, cp in zip(params["prefix"], prefix, cache["prefix"]):
-            x, cp = _layer_decode(lp, cfg, kind, x, cp, pos)
+            x, cp = _layer_decode(lp, cfg, kind, x, cp, pos, page_table)
             cps.append(cp)
         new_cache["prefix"] = cps
 
@@ -487,7 +496,7 @@ def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array
             gp, gc = gp_cache
             cs = []
             for lp, kind, cp in zip(gp, cfg.pattern, gc):
-                x, cp = _layer_decode(lp, cfg, kind, x, cp, pos)
+                x, cp = _layer_decode(lp, cfg, kind, x, cp, pos, page_table)
                 cs.append(cp)
             return x, tuple(cs)
         x, gcache = jax.lax.scan(group_body, x, (params["groups"], tuple(cache["groups"])))
@@ -496,7 +505,7 @@ def decode_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array
     if rem:
         crs = []
         for lp, kind, cp in zip(params["rem"], rem, cache["rem"]):
-            x, cp = _layer_decode(lp, cfg, kind, x, cp, pos)
+            x, cp = _layer_decode(lp, cfg, kind, x, cp, pos, page_table)
             crs.append(cp)
         new_cache["rem"] = crs
 

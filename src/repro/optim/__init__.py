@@ -1,3 +1,4 @@
+"""μ²-SGD with AnyTime averaging (paper §3) + momentum/SGD baselines."""
 from .mu2sgd import (  # noqa: F401
     OptConfig,
     OptState,

@@ -1,17 +1,23 @@
 """repro.serve — continuous-batching decode engine.
 
-Slot-mapped KV cache (cache.py), bucketed FCFS admission scheduler
-(scheduler.py) and the ServeEngine (engine.py) driving jitted
-prefill → insert → decode-slots steps with per-request streaming outputs.
-See serve/README.md for the cache layout and scheduling policy.
+Slot-mapped KV cache, dense or block-table paged (cache.py), bucketed FCFS
+admission scheduler with slot + page budgets (scheduler.py) and the
+ServeEngine (engine.py) driving jitted prefill → insert → decode-slots steps
+with per-request streaming outputs. See serve/README.md for the cache
+layouts and scheduling policy.
 """
-from repro.serve.cache import SlotMap, init_slot_cache, insert_prefill
+from repro.serve.cache import (PageAllocator, SlotMap, init_paged_cache,
+                               init_slot_cache, insert_prefill,
+                               insert_prefill_paged, pages_per_slot,
+                               slot_hbm_bytes)
 from repro.serve.engine import ServeConfig, ServeEngine, ServeReport, serve
 from repro.serve.scheduler import (PrefillPlan, Request, Scheduler,
                                    default_buckets, synth_workload)
 
 __all__ = [
-    "PrefillPlan", "Request", "Scheduler", "ServeConfig", "ServeEngine",
-    "ServeReport", "SlotMap", "default_buckets", "init_slot_cache",
-    "insert_prefill", "serve", "synth_workload",
+    "PageAllocator", "PrefillPlan", "Request", "Scheduler", "ServeConfig",
+    "ServeEngine", "ServeReport", "SlotMap", "default_buckets",
+    "init_paged_cache", "init_slot_cache", "insert_prefill",
+    "insert_prefill_paged", "pages_per_slot", "serve", "slot_hbm_bytes",
+    "synth_workload",
 ]

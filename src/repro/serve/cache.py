@@ -1,11 +1,23 @@
-"""Slot-mapped decode cache: fixed (S, max_len, ...) ring buffers + per-slot
-position vector, donated in-place by the engine's jitted steps.
+"""Slot-mapped decode cache — dense and paged layouts — donated in-place by
+the engine's jitted steps.
 
-The device-side cache is the ordinary ``models.lm.init_cache`` pytree with two
-twists: the leading batch dim is the number of SLOTS (requests map onto slots,
-not batch rows), and ``cache["pos"]`` is a (S,) int32 vector — every slot
-decodes at its own absolute depth (models/lm.py ``decode_step`` accepts both
-the scalar and the vector form).
+DENSE layout: the ordinary ``models.lm.init_cache`` pytree with two twists:
+the leading batch dim is the number of SLOTS (requests map onto slots, not
+batch rows), and ``cache["pos"]`` is a (S,) int32 vector — every slot decodes
+at its own absolute depth (models/lm.py ``decode_step`` accepts both the
+scalar and the vector form). Every slot reserves ``max_len`` KV rows per
+global attention layer, whatever its request's real length.
+
+PAGED layout (``init_paged_cache``): global/full attention layers swap the
+``(S, max_len, KV, hd)`` rows for a fixed physical page pool
+``(n_pages + 1, page_size, KV, hd)`` per layer — the LAST page is the dump
+page — plus a host-side block table (``PageAllocator``) mapping each slot's
+logical pages to physical ones. Cache HBM then scales with the sum of actual
+sequence lengths (rounded up to pages), not ``n_slots × max_len``, and the
+scheduler admits by free *pages*. Local (sliding-window) ring buffers, SSM
+and RG-LRU states stay per-slot dense: they already scale with ``window`` /
+O(1) state, so paging them would gain nothing (and would *lose* the ring's
+bound for long decodes).
 
 ``insert_prefill`` scatters whole per-request cache rows (KV ring buffers,
 SSM conv+state, RG-LRU conv+h, and pos) from a right-padded prefill into free
@@ -14,10 +26,17 @@ index (out-of-bounds → mode="drop"), used for the padding rows that keep the
 prefill batch shape static. Because the scatter overwrites EVERY leaf row of
 the target slot — including the zero-filled tail beyond the request's true
 length that the exact prefill emits — a freed slot's stale KV can never leak
-into the request that reuses it.
+into the request that reuses it. ``insert_prefill_paged`` does the same for
+the paged layout, scattering each prefill position into its slot's page
+``t // page_size`` row ``t % page_size``; positions past the slot's table
+span (oversized buckets) and all padding rows land on the dump page. Paged
+slot reuse is protected by *validity* rather than overwrite: a recycled page
+is only ever read at positions ``<= pos``, all of which the new request has
+re-written by then.
 
-Host-side bookkeeping (which slot belongs to which request) lives in
-``SlotMap`` — a free-list allocator; the device never sees request identity.
+Host-side bookkeeping lives in ``SlotMap`` (free-list slot allocator) and
+``PageAllocator`` (free-list page allocator + block table); the device never
+sees request identity.
 """
 from __future__ import annotations
 
@@ -25,17 +44,49 @@ from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.lm import init_cache
+from repro.models.lm import _kind_cache, init_cache, layer_plan
 
 Pytree = Any
 
 
 def init_slot_cache(cfg: ModelConfig, n_slots: int, max_len: int) -> dict:
-    """Decode cache with ``n_slots`` rows and a per-slot (S,) pos vector."""
+    """Dense decode cache with ``n_slots`` rows and a per-slot (S,) pos."""
     cache = init_cache(cfg, n_slots, max_len)
     cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return cache
+
+
+def pages_per_slot(max_len: int, page_size: int) -> int:
+    """Logical pages covering ``max_len`` positions (block-table width)."""
+    return -(-max_len // page_size)
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int,
+                     page_size: int, n_pages: int) -> dict:
+    """Paged decode cache: per-layer KV page pools for global attention,
+    dense per-slot leaves for everything else (see module docstring)."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def kind_cache(kind):
+        if kind in ("attn", "global"):
+            kc = jnp.zeros((n_pages + 1, page_size, cfg.n_kv, cfg.hd), dtype)
+            return (kc, kc)
+        # local ring / SSM / RG-LRU: per-slot, identical to the dense layout
+        return _kind_cache(cfg, kind, n_slots, max_len, dtype)
+
+    prefix, n_full, rem = layer_plan(cfg)
+    cache: dict = {"pos": jnp.zeros((n_slots,), jnp.int32)}
+    if prefix:
+        cache["prefix"] = [kind_cache(k) for k in prefix]
+    if n_full:
+        one = [kind_cache(k) for k in cfg.pattern]
+        cache["groups"] = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (n_full,) + l.shape).copy(), one)
+    if rem:
+        cache["rem"] = [kind_cache(k) for k in rem]
     return cache
 
 
@@ -43,8 +94,21 @@ def _top_key(path) -> Optional[str]:
     return getattr(path[0], "key", None) if path else None
 
 
+def _path_kind(cfg: ModelConfig, path) -> Optional[str]:
+    """Layer kind ('attn'|'global'|'local'|'ssm'|'rec') a cache-leaf path
+    belongs to, or None for the top-level pos vector."""
+    top = _top_key(path)
+    if top not in ("prefix", "groups", "rem"):
+        return None
+    idx = path[1].idx
+    if top == "groups":
+        return cfg.pattern[idx]
+    prefix, _, rem = layer_plan(cfg)
+    return (prefix if top == "prefix" else rem)[idx]
+
+
 def insert_prefill(cache: dict, pcache: dict, slot_ids) -> dict:
-    """Scatter per-request prefill cache rows into slots.
+    """Scatter per-request prefill cache rows into slots (dense layout).
 
     cache: slot cache (rows = S slots); pcache: the cache a right-padded
     ``prefill(..., lens=)`` emitted (rows = prefill batch); slot_ids: (Bp,)
@@ -60,6 +124,73 @@ def insert_prefill(cache: dict, pcache: dict, slot_ids) -> dict:
         return leaf.at[slot_ids].set(prow.astype(leaf.dtype), mode="drop")
 
     return jax.tree_util.tree_map_with_path(put, cache, pcache)
+
+
+def insert_prefill_paged(cfg: ModelConfig, page_size: int, cache: dict,
+                         pcache: dict, slot_ids, page_table) -> dict:
+    """Scatter per-request prefill cache rows into the paged slot cache.
+
+    Global-attention leaves scatter position ``t`` of prefill row ``b`` into
+    physical page ``page_table[slot_ids[b], t // page_size]`` at row
+    ``t % page_size``; positions whose logical page lies beyond the table
+    span (bucket > pages_per_slot·page_size) and every padding row (slot id
+    = dump row of the table) collapse onto the pool's dump page. All other
+    leaves take the dense whole-row scatter. ``cfg`` and ``page_size`` are
+    static — close over them (functools.partial) before jitting with
+    ``donate_argnums`` on ``cache``."""
+    slot_ids = jnp.asarray(slot_ids, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    pps = page_table.shape[1]
+
+    def put(path, leaf, prow):
+        kind = _path_kind(cfg, path)
+        grouped = _top_key(path) == "groups"
+        if kind in ("attn", "global"):
+            dump = leaf.shape[1 if grouped else 0] - 1
+            bucket = prow.shape[-3]
+            t = jnp.arange(bucket)
+            pj = t // page_size
+            phys = jnp.where(pj[None, :] < pps,
+                             page_table[slot_ids[:, None],
+                                        jnp.minimum(pj, pps - 1)[None, :]],
+                             dump)                       # (Bp, bucket)
+            off = jnp.broadcast_to((t % page_size)[None, :], phys.shape)
+            if grouped:
+                return leaf.at[:, phys, off].set(prow.astype(leaf.dtype))
+            return leaf.at[phys, off].set(prow.astype(leaf.dtype))
+        if grouped and leaf.ndim >= 2:
+            return leaf.at[:, slot_ids].set(prow.astype(leaf.dtype), mode="drop")
+        return leaf.at[slot_ids].set(prow.astype(leaf.dtype), mode="drop")
+
+    return jax.tree_util.tree_map_with_path(put, cache, pcache)
+
+
+def slot_hbm_bytes(cfg: ModelConfig, max_len: int,
+                   kv_rows: Optional[int] = None) -> int:
+    """Decode-cache HBM bytes ONE request pins while resident.
+
+    ``kv_rows=None`` is the dense layout: every global attention layer holds
+    ``max_len`` KV rows for the slot. ``kv_rows=r`` is the paged layout: the
+    request's global layers hold only its ``r`` allocated page rows. Local
+    ring (``window`` rows), SSM and RG-LRU state costs are identical in both
+    layouts. Used by benchmarks/bench_serve.py for the dense-vs-paged
+    memory-accounting A/B."""
+    bpe = jnp.dtype(cfg.dtype).itemsize
+    kv_row = 2 * cfg.n_kv * cfg.hd * bpe                # K + V
+    total = 0
+    for kind in cfg.layer_kinds():
+        if kind == "local":
+            total += cfg.window * kv_row
+        elif kind == "ssm":
+            di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+            total += (cfg.conv_width - 1) * (di + 2 * N) * bpe
+            total += H * (di // H) * N * 4              # f32 recurrent state
+        elif kind == "rec":
+            w = cfg.lru_width or cfg.d_model
+            total += (cfg.conv_width - 1) * w * bpe + w * 4
+        else:
+            total += (max_len if kv_rows is None else kv_rows) * kv_row
+    return total
 
 
 class SlotMap:
@@ -105,3 +236,62 @@ class SlotMap:
             raise KeyError(f"slot {slot} is not allocated")
         del self._owner[slot]
         self._free.append(slot)
+
+
+class PageAllocator:
+    """Host-side free-list page allocator + block table.
+
+    ``table`` is the (n_slots + 1, pages_per_slot) int32 block table handed
+    to the jitted steps each call: row ``s`` maps slot ``s``'s logical pages
+    to physical pool pages; unallocated entries — and the entire extra DUMP
+    row used for prefill padding — hold ``n_pages`` (the pool's dump page).
+    Pages are claimed for a request's full worst-case span
+    (``pages_needed(prompt + max_new)``) at admission and returned when the
+    slot retires; on-demand growth + preemption is a ROADMAP follow-up."""
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int,
+                 n_pages: int):
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.pages_per_slot = pages_per_slot(max_len, page_size)
+        self.dump_page = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._held: dict[int, List[int]] = {}  # slot -> physical page ids
+        self.table = np.full((n_slots + 1, self.pages_per_slot), n_pages,
+                             np.int32)
+
+    def pages_needed(self, seq_len: int) -> int:
+        return pages_per_slot(seq_len, self.page_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return self.n_used / self.n_pages
+
+    def alloc(self, slot: int, n: int) -> List[int]:
+        """Claim ``n`` physical pages as slot ``slot``'s logical pages 0..n-1."""
+        if slot in self._held:
+            raise RuntimeError(f"slot {slot} already holds pages")
+        if n > self.pages_per_slot:
+            raise ValueError(f"need {n} pages > pages_per_slot "
+                             f"{self.pages_per_slot}")
+        if n > len(self._free):
+            raise RuntimeError(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._held[slot] = pages
+        self.table[slot, :n] = pages
+        self.table[slot, n:] = self.dump_page
+        return pages
+
+    def free(self, slot: int) -> None:
+        if slot not in self._held:
+            raise KeyError(f"slot {slot} holds no pages")
+        self._free.extend(self._held.pop(slot))
+        self.table[slot, :] = self.dump_page

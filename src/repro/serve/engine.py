@@ -17,12 +17,23 @@ fixed batch at a time — admission only when the engine is idle, no slot
 retirement until the whole batch finishes — so short requests pay for the
 longest request in their batch (the behaviour the ROADMAP item calls out).
 
+``ServeConfig(paged=True)`` swaps the dense slot cache for the block-table
+paged layout (cache.py): global-attention KV lives in fixed page pools, a
+host-side ``PageAllocator`` hands each admitted request
+``ceil((prompt + max_new) / page_size)`` physical pages, and admission is
+bounded by free PAGES as well as free slots. The block table rides into the
+jitted insert/decode steps as a small int32 argument (shape-static, so no
+recompiles); freeing a slot just returns its pages and points its table row
+at the dump page. Works for both engines; greedy outputs are token-identical
+to the dense layout (pinned in tests/test_serve_engine.py).
+
 Metrics are split into compile (warmup) / prefill / decode wall time;
 `combined_tok_s` keeps the old serve launcher's single figure.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional, Sequence
@@ -34,7 +45,9 @@ import numpy as np
 from repro.dist.steps import (make_decode_slots_step, make_serve_prefill_step,
                               sample_next)
 from repro.models.config import ModelConfig
-from repro.serve.cache import SlotMap, init_slot_cache, insert_prefill
+from repro.serve.cache import (PageAllocator, SlotMap, init_paged_cache,
+                               init_slot_cache, insert_prefill,
+                               insert_prefill_paged, pages_per_slot)
 from repro.serve.scheduler import (PrefillPlan, Request, Scheduler,
                                    default_buckets)
 
@@ -51,6 +64,10 @@ class ServeConfig:
     top_k: int = 0                  # 0 -> full vocab
     eos_id: Optional[int] = None    # None -> retire on max_new_tokens only
     seed: int = 0                   # sampling PRNG seed (per-request fold_in)
+    paged: bool = False             # block-table paged KV cache (cache.py)
+    page_size: int = 16             # KV rows per page
+    n_pages: int = 0                # physical pool pages; 0 -> dense-equivalent
+                                    # capacity (n_slots * pages_per_slot)
 
 
 @dataclasses.dataclass
@@ -70,6 +87,11 @@ class ServeReport:
     latency_p50_s: float = 0.0      # request completion - arrival
     latency_p99_s: float = 0.0
     mean_occupancy: float = 0.0     # useful slot-rows per decode step
+    paged: bool = False
+    page_size: int = 0
+    n_pages: int = 0                # physical pool pages (excl. dump page)
+    mean_page_occupancy: float = 0.0  # pages in use per decode step / n_pages
+    mean_pages_per_req: float = 0.0   # allocated pages per admitted request
     outputs: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
@@ -104,9 +126,18 @@ class ServeEngine:
         self.sched = Scheduler(buckets, self._prefill_batch)
         self.slots = SlotMap(S)
         self.slot_req: Dict[int, Request] = {}
+        self.paged = scfg.paged
+        if self.paged:
+            n_pages = scfg.n_pages or S * pages_per_slot(scfg.max_len,
+                                                         scfg.page_size)
+            self.pager = PageAllocator(S, scfg.max_len, scfg.page_size,
+                                       n_pages)
+        else:
+            self.pager = None
 
         prefill_step = make_serve_prefill_step(cfg, scfg.max_len)
-        decode_step = make_decode_slots_step(cfg, scfg.temperature, scfg.top_k)
+        decode_step = make_decode_slots_step(cfg, scfg.temperature,
+                                             scfg.top_k, paged=self.paged)
         t, k = scfg.temperature, scfg.top_k
 
         def first_token(logits, req_keys):
@@ -116,6 +147,10 @@ class ServeEngine:
                                jnp.zeros(req_keys.shape[0], jnp.int32), t, k)
 
         if mesh is not None:
+            if self.paged:
+                # paged pools shard over pages, not slots — wiring the page
+                # axis into cache_sharding is a ROADMAP follow-up
+                raise NotImplementedError("paged cache + mesh serving")
             from repro.dist.sharding import cache_sharding, param_sharding
             from repro.launch.specs import serve_cache_specs
             c_shard = cache_sharding(cfg, mesh,
@@ -131,6 +166,14 @@ class ServeEngine:
                                    out_shardings=(None, c_shard))
             self.cache = jax.device_put(
                 init_slot_cache(cfg, S, scfg.max_len), c_shard)
+        elif self.paged:
+            self._prefill = jax.jit(prefill_step)
+            self._insert = jax.jit(
+                functools.partial(insert_prefill_paged, cfg, scfg.page_size),
+                donate_argnums=(0,))
+            self._decode = jax.jit(decode_step, donate_argnums=(1,))
+            self.cache = init_paged_cache(cfg, S, scfg.max_len,
+                                          scfg.page_size, self.pager.n_pages)
         else:
             self._prefill = jax.jit(prefill_step)
             self._insert = jax.jit(insert_prefill, donate_argnums=(0,))
@@ -143,8 +186,13 @@ class ServeEngine:
         self.cur_tok = np.zeros((S,), np.int32)
         self.req_keys = np.zeros((S, 2), np.uint32)
         self.gen_idx = np.zeros((S,), np.int32)
-        self.report = ServeReport(engine=engine)
+        self.report = ServeReport(engine=engine, paged=self.paged)
+        if self.paged:
+            self.report.page_size = scfg.page_size
+            self.report.n_pages = self.pager.n_pages
         self._occ_sum = 0.0
+        self._page_occ_sum = 0.0
+        self._pages_per_req: List[int] = []
         self._t_start = time.perf_counter()
 
     def _now(self) -> float:
@@ -159,7 +207,14 @@ class ServeEngine:
         extra = self.cfg.n_patches if self.cfg.frontend == "vision" else 0
         return req.prompt_len + extra
 
-    def submit(self, req: Request) -> None:
+    def _pages_for(self, req: Request) -> int:
+        """Worst-case KV pages the request pins (prompt + max_new span)."""
+        return self.pager.pages_needed(
+            self._positions(req) + req.max_new_tokens)
+
+    def _validate(self, req: Request) -> None:
+        """Admission constraints — shared by submit() and run()'s fail-fast
+        pre-check so acceptance can never diverge between the two."""
         if self._positions(req) + req.max_new_tokens > self.scfg.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt ({self._positions(req)}) + "
@@ -167,6 +222,13 @@ class ServeEngine:
                 f"{self.scfg.max_len}")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.paged and self._pages_for(req) > self.pager.n_pages:
+            raise ValueError(
+                f"request {req.uid}: needs {self._pages_for(req)} pages "
+                f"> pool size {self.pager.n_pages}")
+
+    def submit(self, req: Request) -> None:
+        self._validate(req)
         self.sched.submit(req)
 
     # ------------------------------------------------------------------
@@ -199,12 +261,20 @@ class ServeEngine:
         keys = np.zeros((B, 2), np.uint32)
         for i, r in enumerate(plan.requests):
             slot_ids[i] = self.slots.alloc(r.uid)
+            if self.paged:
+                need = self._pages_for(r)
+                self.pager.alloc(int(slot_ids[i]), need)
+                self._pages_per_req.append(need)
             if self.scfg.temperature > 0.0:
                 keys[i] = self._req_key(r.uid)
 
         t0 = time.perf_counter()
         logits, pcache = self._prefill(self.params, batch, jnp.asarray(lens))
-        self.cache = self._insert(self.cache, pcache, slot_ids)
+        if self.paged:
+            self.cache = self._insert(self.cache, pcache, slot_ids,
+                                      jnp.asarray(self.pager.table))
+        else:
+            self.cache = self._insert(self.cache, pcache, slot_ids)
         first = np.asarray(self._first(logits, jnp.asarray(keys)))
         jax.block_until_ready(self.cache)
         self.report.prefill_s += time.perf_counter() - t0
@@ -233,13 +303,18 @@ class ServeEngine:
     def _release(self, slot: int) -> None:
         del self.slot_req[slot]
         self.slots.free(slot)
+        if self.paged:
+            self.pager.free(slot)
 
     def _decode_tick(self) -> None:
         useful = sum(1 for r in self.slot_req.values() if not r.done)
         t0 = time.perf_counter()
-        toks, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.cur_tok[:, None]),
-            jnp.asarray(self.req_keys), jnp.asarray(self.gen_idx))
+        args = (self.params, self.cache, jnp.asarray(self.cur_tok[:, None]),
+                jnp.asarray(self.req_keys), jnp.asarray(self.gen_idx))
+        if self.paged:
+            self._page_occ_sum += self.pager.occupancy
+            args += (jnp.asarray(self.pager.table),)
+        toks, self.cache = self._decode(*args)
         toks = np.asarray(toks)                      # host sync
         self.report.decode_s += time.perf_counter() - t0
         self.report.decode_steps += 1
@@ -282,14 +357,20 @@ class ServeEngine:
                 lens = lens + cfg.n_patches
             logits, pcache = self._prefill(self.params, batch,
                                            jnp.asarray(lens))
-            self.cache = self._insert(
-                self.cache, pcache,
-                np.full((B,), self.slots.dump_slot, np.int32))
+            dump_ids = np.full((B,), self.slots.dump_slot, np.int32)
+            if self.paged:
+                self.cache = self._insert(self.cache, pcache, dump_ids,
+                                          jnp.asarray(self.pager.table))
+            else:
+                self.cache = self._insert(self.cache, pcache, dump_ids)
             self._first(logits, jnp.zeros((B, 2), jnp.uint32))
-        _, self.cache = self._decode(
-            self.params, self.cache, jnp.zeros((self.slots.n_slots, 1), jnp.int32),
-            jnp.zeros((self.slots.n_slots, 2), jnp.uint32),
-            jnp.zeros((self.slots.n_slots,), jnp.int32))
+        dargs = (self.params, self.cache,
+                 jnp.zeros((self.slots.n_slots, 1), jnp.int32),
+                 jnp.zeros((self.slots.n_slots, 2), jnp.uint32),
+                 jnp.zeros((self.slots.n_slots,), jnp.int32))
+        if self.paged:
+            dargs += (jnp.asarray(self.pager.table),)
+        _, self.cache = self._decode(*dargs)
         jax.block_until_ready(self.cache)
         dt = time.perf_counter() - t0
         self.report.compile_s += dt
@@ -305,8 +386,7 @@ class ServeEngine:
         start of the loop; pre-sorted or not) and return the report."""
         reqs = sorted(requests, key=lambda r: r.arrival)
         for r in reqs:          # fail fast — BEFORE paying the jit warmup
-            if self._positions(r) + r.max_new_tokens > self.scfg.max_len:
-                raise ValueError(f"request {r.uid} exceeds max_len")
+            self._validate(r)
         if warmup:
             self.warmup([r.prompt_len for r in reqs])
         pending = deque(reqs)
@@ -318,18 +398,35 @@ class ServeEngine:
             if self.static:
                 # fixed-batch baseline: admit only when the engine is idle
                 if self.slots.n_active == 0 and self.sched.n_waiting:
-                    take = [self.sched.queue.popleft()
-                            for _ in range(min(self.slots.n_slots,
-                                               self.sched.n_waiting))]
-                    bucket = self.sched.bucket_for(
-                        max(r.prompt_len for r in take))
-                    self._do_prefill(PrefillPlan(take, bucket))
-                    if all(r.done for r in self.slot_req.values()):
+                    take: List[Request] = []
+                    budget = self.pager.n_free if self.paged else None
+                    while self.sched.n_waiting and \
+                            len(take) < self.slots.n_slots:
+                        if budget is not None:
+                            need = self._pages_for(self.sched.queue[0])
+                            if need > budget:
+                                break
+                            budget -= need
+                        take.append(self.sched.queue.popleft())
+                    if take:
+                        bucket = self.sched.bucket_for(
+                            max(r.prompt_len for r in take))
+                        self._do_prefill(PrefillPlan(take, bucket))
+                    if self.slot_req and \
+                            all(r.done for r in self.slot_req.values()):
                         for slot in list(self.slot_req):  # all max_new == 1
                             self._release(slot)
             else:
                 while self.slots.n_free and self.sched.n_waiting:
-                    plan = self.sched.plan_prefill(self.slots.n_free)
+                    if self.paged:
+                        plan = self.sched.plan_prefill(
+                            self.slots.n_free,
+                            page_budget=self.pager.n_free,
+                            pages_for=self._pages_for)
+                    else:
+                        plan = self.sched.plan_prefill(self.slots.n_free)
+                    if plan is None:   # head request waits for free pages
+                        break
                     self._do_prefill(plan)
             if self.slots.n_active:
                 self._decode_tick()
@@ -348,6 +445,10 @@ class ServeEngine:
             rep.latency_p99_s = float(np.percentile(lat, 99))
         if rep.decode_steps:
             rep.mean_occupancy = self._occ_sum / rep.decode_steps
+            if self.paged:
+                rep.mean_page_occupancy = self._page_occ_sum / rep.decode_steps
+        if self._pages_per_req:
+            rep.mean_pages_per_req = float(np.mean(self._pages_per_req))
         # first tokens come out of prefill; decode throughput counts the
         # tokens the decode loop itself produced
         decode_toks = rep.gen_tokens - rep.n_requests

@@ -12,6 +12,10 @@ Policy (see serve/README.md for the full table):
 - Slot admission — a prefill is planned only for as many requests as there
   are free slots; decode proceeds every engine tick for whatever slots are
   active, and slots retire independently on EOS / max_new_tokens.
+- Page admission (paged cache) — with a ``page_budget``, each request must
+  additionally fit its worst-case KV page need (``pages_for``); when the
+  HEAD request does not fit, nothing is planned (still FCFS — the engine
+  waits for retirements to return pages rather than jumping the queue).
 """
 from __future__ import annotations
 
@@ -85,18 +89,33 @@ class Scheduler:
     def n_waiting(self) -> int:
         return len(self.queue)
 
-    def plan_prefill(self, n_free_slots: int) -> Optional[PrefillPlan]:
+    def plan_prefill(self, n_free_slots: int,
+                     page_budget: Optional[int] = None,
+                     pages_for=None) -> Optional[PrefillPlan]:
         """Pop up to min(free slots, max_prefill_batch) head-of-queue requests
         into one padded prefill batch. The bucket is the head request's; later
         requests join only if they fit it (FCFS — a long request is never
-        jumped, it just starts its own batch next call)."""
+        jumped, it just starts its own batch next call). With a
+        ``page_budget`` (paged cache), requests also join only while
+        ``pages_for(req)`` fits the remaining budget; a head request that
+        does not fit returns None (wait for retirements)."""
         if not self.queue or n_free_slots <= 0:
             return None
         k = min(n_free_slots, self.max_prefill_batch)
-        bucket = self.bucket_for(self.queue[0].prompt_len)
+        head = self.queue[0]
+        if page_budget is not None and pages_for(head) > page_budget:
+            return None
+        bucket = self.bucket_for(head.prompt_len)
+        if page_budget is not None:
+            page_budget -= pages_for(head)
         taken: List[Request] = [self.queue.popleft()]
         while self.queue and len(taken) < k and \
                 self.queue[0].prompt_len <= bucket:
+            if page_budget is not None:
+                need = pages_for(self.queue[0])
+                if need > page_budget:
+                    break
+                page_budget -= need
             taken.append(self.queue.popleft())
         return PrefillPlan(requests=taken, bucket_len=bucket)
 

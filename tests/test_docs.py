@@ -1,0 +1,23 @@
+"""Docs health stays pinned in tier-1 (CI also runs tools/docs_check.py as
+its own step): no broken intra-repo markdown links, no public src/repro
+module without a docstring."""
+import importlib.util
+import pathlib
+import sys
+
+
+def _load_docs_check():
+    path = pathlib.Path(__file__).resolve().parents[1] / "tools" / "docs_check.py"
+    spec = importlib.util.spec_from_file_location("docs_check", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["docs_check"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_no_broken_markdown_links():
+    assert _load_docs_check().check_links() == []
+
+
+def test_public_modules_have_docstrings():
+    assert _load_docs_check().check_docstrings() == []

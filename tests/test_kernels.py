@@ -166,6 +166,106 @@ def test_swa_decode_sweep(B, H, KV, hd, W, local, pos, dtype):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("B,H,KV,hd,W,local", [
+    (3, 8, 2, 64, 512, True),
+    (3, 8, 2, 64, 512, False),
+    (4, 4, 4, 32, 256, True),
+    (2, 16, 1, 64, 128, False),
+])
+def test_swa_decode_per_slot_pos_sweep(B, H, KV, hd, W, local):
+    """Vector (B,) pos — the slot-mapped serving form. Rows at depth 0, a
+    partially-filled cache, exactly W-1, and a wrapped ring must all match
+    the masked-SDPA oracle row-for-row (this used to fall back to SDPA)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(KEY, B * W), 4)
+    q = jax.random.normal(k1, (B, H, hd))
+    kc = jax.random.normal(k2, (B, W, KV, hd))
+    vc = jax.random.normal(k3, (B, W, KV, hd))
+    pos = jax.random.randint(k4, (B,), 0, 3 * W).astype(jnp.int32)
+    pos = pos.at[0].set(0).at[1].set(W - 1)          # edge depths
+    got = ops.swa_decode(q, kc, vc, pos, local=local)
+    want = ref.swa_decode_ref(q, kc, vc, pos, local=local)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+    # each row must equal its own scalar-pos decode (per-slot independence)
+    for b in range(B):
+        solo = ref.swa_decode_ref(q[b:b + 1], kc[b:b + 1], vc[b:b + 1],
+                                  pos[b], local=local)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(solo[0]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged flash decode (block-table page pools — serve/cache.py layout)
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # S, H, KV, hd, P, pages_per_slot
+    (3, 8, 2, 64, 16, 4),
+    (4, 4, 4, 32, 8, 6),
+    (2, 16, 1, 64, 32, 2),
+    (1, 2, 2, 32, 4, 7),
+]
+
+
+def _paged_fixture(S, H, KV, hd, P, pps, seed):
+    """Random pools + a permuted block table + per-slot pos exercising
+    depth 0, a partially-filled last page, and the full span."""
+    n_pages = S * pps
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 4)
+    q = jax.random.normal(ks[0], (S, H, hd))
+    kp = jax.random.normal(ks[1], (n_pages + 1, P, KV, hd))
+    vp = jax.random.normal(ks[2], (n_pages + 1, P, KV, hd))
+    perm = np.random.default_rng(seed).permutation(n_pages)
+    tbl = jnp.asarray(perm.reshape(S, pps), jnp.int32)
+    pos = jax.random.randint(ks[3], (S,), 0, pps * P).astype(jnp.int32)
+    pos = pos.at[0].set(0)                       # first token
+    if S > 1:
+        pos = pos.at[1].set(pps * P - 1)         # full span
+    if S > 2:
+        pos = pos.at[2].set(P + P // 2)          # partially-filled last page
+    return q, kp, vp, tbl, pos
+
+
+@pytest.mark.parametrize("S,H,KV,hd,P,pps", PAGED_CASES)
+def test_paged_decode_sweep(S, H, KV, hd, P, pps):
+    q, kp, vp, tbl, pos = _paged_fixture(S, H, KV, hd, P, pps, seed=S * P)
+    got = ops.paged_decode(q, kp, vp, tbl, pos)
+    want = ref.paged_decode_ref(q, kp, vp, tbl, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_matches_dense_gather():
+    """Paging is a pure relayout: gathering each slot's pages into a dense
+    cache and running the dense causal kernel must give the same output."""
+    S, H, KV, hd, P, pps = 3, 4, 2, 32, 8, 4
+    q, kp, vp, tbl, pos = _paged_fixture(S, H, KV, hd, P, pps, seed=99)
+    got = ops.paged_decode(q, kp, vp, tbl, pos)
+    kc = kp[tbl].reshape(S, pps * P, KV, hd)
+    vc = vp[tbl].reshape(S, pps * P, KV, hd)
+    want = ref.swa_decode_ref(q, kc, vc, pos, local=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_paged_decode_dump_pages_masked():
+    """Logical pages past ``pos`` may point at the dump page (unallocated):
+    whatever garbage lives there must not change the output."""
+    S, H, KV, hd, P, pps = 2, 4, 2, 32, 8, 4
+    q, kp, vp, tbl, pos = _paged_fixture(S, H, KV, hd, P, pps, seed=7)
+    pos = jnp.asarray([P - 2, 2 * P + 1], jnp.int32)   # 1 / 3 pages allocated
+    dump = kp.shape[0] - 1
+    tbl_dumped = tbl.at[0, 1:].set(dump).at[1, 3:].set(dump)
+    a = ops.paged_decode(q, kp, vp, tbl, pos)
+    b = ops.paged_decode(q, kp, vp, tbl_dumped, pos)
+    # poison the dump page: still identical
+    kp2 = kp.at[dump].set(1e4)
+    vp2 = vp.at[dump].set(-1e4)
+    c = ops.paged_decode(q, kp2, vp2, tbl_dumped, pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-6)
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(3, 10), st.integers(1, 50), st.integers(0, 10_000))
 def test_wcwmed_property_random(m, d, seed):

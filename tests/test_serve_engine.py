@@ -141,6 +141,74 @@ def test_static_engine_short_pays_for_long():
 
 
 # ---------------------------------------------------------------------------
+# paged (block-table) cache: dense parity, page admission, page reuse
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_paged_matches_dense_all_archs(cfg):
+    """Greedy token streams must be identical between the dense slot cache
+    and the block-table paged cache, for every decode-capable mixer (global
+    attention pages; local ring / SSM / RG-LRU stay per-slot dense)."""
+    cfg, params = _params(cfg.name)
+    reqs = _workload(n=6, gen=(2, 5))
+    dense = ServeEngine(cfg, params,
+                        ServeConfig(n_slots=3, max_len=MAXLEN,
+                                    max_prefill_batch=2)).run(_fresh(reqs))
+    paged = ServeEngine(cfg, params,
+                        ServeConfig(n_slots=3, max_len=MAXLEN,
+                                    max_prefill_batch=2, paged=True,
+                                    page_size=8)).run(_fresh(reqs))
+    assert dense.outputs == paged.outputs
+    assert paged.paged and paged.mean_pages_per_req > 0
+
+
+def test_paged_static_parity_and_page_budget_admission():
+    """Static engine under paging; and a pool so tight only one request's
+    pages fit at a time — admission must wait for retirements, outputs must
+    not change."""
+    cfg, params = _params("swa")
+    reqs = _workload(n=6, gen=(2, 5))
+    ref = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=3, max_len=MAXLEN)).run(_fresh(reqs))
+    stat = ServeEngine(cfg, params,
+                       ServeConfig(n_slots=len(reqs), max_len=MAXLEN,
+                                   paged=True, page_size=8),
+                       engine="static").run(_fresh(reqs))
+    assert ref.outputs == stat.outputs
+    # 3 pages of 8 rows: a worst-case request (<= 17 positions) needs all 3
+    tight = ServeEngine(cfg, params,
+                        ServeConfig(n_slots=3, max_len=MAXLEN, paged=True,
+                                    page_size=8, n_pages=3)).run(_fresh(reqs))
+    assert ref.outputs == tight.outputs
+    assert tight.mean_occupancy < ref.mean_occupancy  # pages, not slots, bind
+
+
+def test_paged_rejects_request_larger_than_pool():
+    cfg, params = _params("dense")
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN, paged=True,
+                                  page_size=8, n_pages=2))
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(uid=0, tokens=np.zeros(12, np.int32),
+                           max_new_tokens=8))  # 20 positions -> 3 pages > 2
+
+
+def test_paged_pallas_decode_parity():
+    """The per-slot dense flash kernel (local ring) and the paged flash
+    kernel (global layers) must reproduce the jnp-oracle engine streams."""
+    cfg, params = _params("swa")
+    reqs = _workload(n=4, gen=(2, 5))
+    ref = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN)).run(_fresh(reqs))
+    pal = cfg.with_(use_pallas_decode=True)
+    for paged in (False, True):
+        out = ServeEngine(pal, params,
+                          ServeConfig(n_slots=2, max_len=MAXLEN, paged=paged,
+                                      page_size=8)).run(_fresh(reqs))
+        assert ref.outputs == out.outputs, f"paged={paged}"
+
+
+# ---------------------------------------------------------------------------
 # slot reuse
 # ---------------------------------------------------------------------------
 
@@ -156,6 +224,20 @@ def test_slot_reuse_no_stale_kv_leak():
         solo = ServeEngine(cfg, params,
                            ServeConfig(n_slots=1, max_len=MAXLEN,
                                        max_prefill_batch=1)).run(_fresh([r]))
+        assert shared.outputs[r.uid] == solo.outputs[r.uid], r.uid
+
+
+def test_paged_page_reuse_no_stale_page_leak():
+    """One slot + a pool exactly one request wide: every request recycles
+    the previous one's physical pages. Validity masking (not overwrite) is
+    what protects paged reuse — outputs must match isolated runs."""
+    cfg, params = _params("swa")
+    reqs = _workload(n=4, seed=9)
+    kw = dict(n_slots=1, max_len=MAXLEN, max_prefill_batch=1, paged=True,
+              page_size=8, n_pages=3)   # ceil(max positions / 8) pages total
+    shared = ServeEngine(cfg, params, ServeConfig(**kw)).run(_fresh(reqs))
+    for r in reqs:
+        solo = ServeEngine(cfg, params, ServeConfig(**kw)).run(_fresh([r]))
         assert shared.outputs[r.uid] == solo.outputs[r.uid], r.uid
 
 
