@@ -1,0 +1,108 @@
+"""Byzantine-tolerant replicated serving benchmark (repro.serve.replicated).
+
+Three panels on one shared greedy workload:
+
+- honest baseline — single-replica ServeEngine vs the R-replica honest
+  fleet: the voted stream is asserted TOKEN-IDENTICAL before any number is
+  reported, and the replication overhead lands as the voted/single decode
+  tok/s ratio (the price of fault tolerance when nothing faults);
+- attack accuracy — for every inference-time attack (corrupt, sign_flip,
+  little, empire) with f < R/2 Byzantine replicas, plus a dead and a
+  hanging replica scenario: per-token accuracy of the voted stream against
+  the honest stream (1.0 = robust vote fully masks the fault);
+- quarantine latency — decode steps until the Zeno++-style pre-vote gate
+  first evicts a Byzantine replica, and the fraction of its votes that
+  scored divergent (the graceful-degradation reaction time in tokens).
+
+Rows follow the orchestrator's ``name,value,derived`` convention; every
+``robustserve_*`` row is persisted to ``BENCH_robust_serve.json`` by
+benchmarks/run.py so successive PRs accumulate a robustness trajectory.
+"""
+from __future__ import annotations
+
+import copy
+
+import jax
+
+from repro.configs import smoke_config
+from repro.core.attacks import LogitAttackConfig
+from repro.models.lm import init_lm
+from repro.serve import (ReplicatedConfig, ReplicatedServeEngine, ServeConfig,
+                         ServeEngine, synth_workload)
+
+ATTACK_PANEL = ("corrupt", "sign_flip", "little", "empire")
+
+
+def _accuracy(outputs, ref) -> float:
+    """Per-token accuracy of ``outputs`` against the honest ``ref`` streams."""
+    match = total = 0
+    for uid, toks in ref.items():
+        got = outputs.get(uid, [])
+        total += len(toks)
+        match += sum(1 for a, b in zip(got, toks) if a == b)
+    return match / total if total else 0.0
+
+
+def run(full: bool = False, smoke: bool = False) -> list[str]:
+    n_requests = 8 if smoke else 24
+    R, slots, gen_max = 3, 4, 16 if smoke else 32
+    cfg = smoke_config("qwen2-1.5b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    max_len = 16 + gen_max
+    scfg = ServeConfig(n_slots=slots, max_len=max_len, max_prefill_batch=2)
+    workload = synth_workload(n_requests, cfg.vocab, seed=0,
+                              prompt_lens=(4, 16), gen_lens=(4, gen_max),
+                              short_frac=0.8, rate=0.0)
+
+    def fresh():
+        return [copy.deepcopy(r) for r in workload]
+
+    def replicated(rcfg):
+        return ReplicatedServeEngine(cfg, params, scfg, rcfg).run(fresh())
+
+    # ---- honest baseline: single engine vs R-replica honest fleet --------
+    single = ServeEngine(cfg, params, scfg).run(fresh())
+    voted = replicated(ReplicatedConfig(n_replicas=R))
+    assert voted.outputs == single.outputs, \
+        "honest-fresh replicated stream diverged from the single engine"
+    overhead = (voted.decode_tok_s / single.decode_tok_s
+                if single.decode_tok_s else 0.0)
+    rows = [
+        f"robustserve_single_decode_tok_s,{single.decode_tok_s:.1f},"
+        f"decode_s={single.decode_s:.3f};steps={single.decode_steps}",
+        f"robustserve_honest_decode_tok_s,{voted.decode_tok_s:.1f},"
+        f"R={R};vote={voted.vote};token_identical=1",
+        f"robustserve_replication_tok_ratio,{overhead:.3f},"
+        f"voted/single decode tok/s (fault-tolerance overhead, R={R})",
+    ]
+
+    # ---- per-attack accuracy vs the honest stream + quarantine latency ---
+    scenarios = [(a, ReplicatedConfig(
+        n_replicas=R, byz=(R - 1,), attack=LogitAttackConfig(name=a)))
+        for a in ATTACK_PANEL]
+    scenarios += [
+        ("dead", ReplicatedConfig(n_replicas=R, dead=(R - 1,), dead_after=1)),
+        ("hang", ReplicatedConfig(n_replicas=R, hang=(R - 1,))),
+    ]
+    for name, rcfg in scenarios:
+        rep = replicated(rcfg)
+        acc = _accuracy(rep.outputs, single.outputs)
+        faulty = rep.replicas[R - 1]
+        div = (faulty["divergent_tokens"] / faulty["tokens_voted"]
+               if faulty["tokens_voted"] else 0.0)
+        rows.append(
+            f"robustserve_{name}_accuracy,{acc:.4f},"
+            f"f=1/{R};decode_tok_s={rep.decode_tok_s:.1f};"
+            f"divergent_frac={div:.2f}")
+        if rep.first_quarantine_step is not None:
+            rows.append(
+                f"robustserve_{name}_quarantine_tokens,"
+                f"{rep.first_quarantine_step},"
+                f"decode steps to first eviction;"
+                f"evictions={faulty['evictions']}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(smoke=True):
+        print(r)

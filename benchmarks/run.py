@@ -19,13 +19,17 @@ experimental panels:
     serve_*     static vs continuous-batching decode A/B (tok/s, p50/p99
                 latency, slot occupancy, decode speedup) — the value column
                 carries the metric, not microseconds
+    robustserve_* Byzantine-tolerant replicated decode: honest-baseline
+                tok/s + replication overhead, per-attack token accuracy vs
+                the honest stream, quarantine latency (value = metric)
 
 Aggregation rows additionally persist to ``BENCH_agg.json`` at the repo root
 so successive PRs accumulate a perf trajectory (``--smoke`` runs the reduced
 aggcost + agghier grids only — the CI fast path — and still records the
 fused-CTMA speedup at the acceptance shape m=17, d=100k). Serve rows persist
 the same way to ``BENCH_serve.json`` (``--only serve --smoke`` is the CI
-serve step).
+serve step) and replicated-serving rows to ``BENCH_robust_serve.json``
+(``--only robust-serve --smoke`` is the CI robustness step).
 """
 from __future__ import annotations
 
@@ -46,10 +50,13 @@ BENCHES = {
     "kernels": "benchmarks.bench_kernels",
     "roofline": "benchmarks.bench_roofline",
     "serve": "benchmarks.bench_serve",
+    "robust-serve": "benchmarks.bench_robust_serve",
 }
 
 BENCH_AGG_PATH = Path(__file__).resolve().parents[1] / "BENCH_agg.json"
 BENCH_SERVE_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+BENCH_ROBUST_SERVE_PATH = (Path(__file__).resolve().parents[1]
+                           / "BENCH_robust_serve.json")
 
 
 def _parse_row(row: str) -> dict:
@@ -82,6 +89,13 @@ def persist_serve(rows: list[str]) -> None:
     """Append this run's serve rows to BENCH_serve.json (tokens/s, p50/p99
     latency, slot occupancy, static-vs-continuous decode speedup)."""
     _persist(BENCH_SERVE_PATH, ("serve_",), rows, "serve")
+
+
+def persist_robust_serve(rows: list[str]) -> None:
+    """Append this run's replicated-serving rows to BENCH_robust_serve.json
+    (honest-baseline tok/s + replication overhead, per-attack token accuracy
+    vs the honest stream, quarantine latency in decode steps)."""
+    _persist(BENCH_ROBUST_SERVE_PATH, ("robustserve_",), rows, "robust-serve")
 
 
 def main() -> None:
@@ -120,6 +134,7 @@ def main() -> None:
             print(f"# {name} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
     persist_agg(all_rows)
     persist_serve(all_rows)
+    persist_robust_serve(all_rows)
     if failures:
         raise SystemExit(1)
 

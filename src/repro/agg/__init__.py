@@ -6,6 +6,11 @@
     d_hat = ctma(X, s)        # X: (m, d) matrix  -> fused Pallas kernels
     d_hat = ctma(tree, s)     # stacked pytree    -> leaf-wise global-pass path
 
+The serving-side logit layout (``logits.py``) rides the same registry:
+``resolve_logits(spec)`` votes an ``(R, S, V)`` per-token logit stack through
+any rule, and ``staleness_weights`` derives the replicas' vote masses from
+checkpoint lag the way the paper derives update weights from delay.
+
 Spec grammar (``spec.py``): ``rule[:base][@backend]``. One registry
 (``registry.py``) backs `core.engine`, `dist.steps`, the launchers, the
 benchmarks and the examples; the legacy factories
@@ -23,3 +28,4 @@ from .registry import (  # noqa: F401
     rules,
 )
 from .baselines import stacked_zeno, weighted_zeno  # noqa: F401
+from .logits import resolve_logits, staleness_weights  # noqa: F401

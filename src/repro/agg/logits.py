@@ -1,0 +1,64 @@
+"""Logit-layout entry point for the unified aggregator registry, plus the
+staleness-derived vote weights of the replicated serving path.
+
+Training aggregates an ``(m, d)`` update matrix once per server iteration;
+replicated serving aggregates an ``(R, S, V)`` logit stack once per decoded
+TOKEN — R replicas voting over S slots' vocab rows. :func:`resolve_logits`
+adapts any registry spec (``rule[:base][@backend]``) to that layout by
+vmapping the rule's flat ``(R, V)`` path over the slot axis, so the vote
+inherits every weighted rule (ω-CWMed, ω-CTMA, ω-GM, zeno, ...) and backend
+the training path has.
+
+:func:`staleness_weights` maps per-replica checkpoint staleness to vote
+masses exactly as the paper maps worker delay to update-count weights
+``s_t^{(i)}``: a replica serving checkpoint version ``v = latest - lag`` has
+absorbed ``v`` server updates, so its mass is ``s_r = latest - lag_r``
+(floored to keep the most stale replica from vanishing from the weighted
+statistics entirely). Equal lags therefore yield equal masses, and the vote
+reduces to the unweighted rule.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from .registry import resolve
+from .spec import SpecLike
+
+Array = jnp.ndarray
+
+
+def resolve_logits(spec: SpecLike, **kw) -> Callable:
+    """Build ``vote(logits, s=None)`` for an ``(R, S, V)`` logit stack.
+
+    ``logits`` carries one (V,)-row per replica per slot; ``s`` is the (R,)
+    vote-mass vector (staleness weights, availability/quarantine-masked).
+    Returns the (S, V) voted logits. The parsed spec rides on ``.spec``."""
+    flat = resolve(spec, **kw)
+
+    def vote(logits: Array, s: Optional[Array] = None) -> Array:
+        return jax.vmap(lambda x: flat(x, s), in_axes=1, out_axes=0)(logits)
+
+    vote.spec = flat.spec
+    vote.__name__ = f"logit_vote<{flat.spec.canonical}>"
+    return vote
+
+
+def staleness_weights(lags: Union[Array, Sequence[float]],
+                      latest_version: Optional[float] = None,
+                      floor: float = 1e-3) -> Array:
+    """Per-replica vote masses from checkpoint staleness (versions behind).
+
+    ``s_r = max(latest_version - lag_r, floor)`` — the update-count weighting
+    of the paper applied to checkpoints: fresher replicas carry more mass,
+    identical lags carry identical mass. ``latest_version`` defaults to
+    ``max(lags) + 1`` so the most stale replica still holds a unit mass and
+    a fully fresh fleet (all lags zero) gets uniform unit masses."""
+    lags = jnp.asarray(lags, jnp.float32)
+    if latest_version is None:
+        latest = jnp.max(lags) + 1.0
+    else:
+        latest = jnp.asarray(latest_version, jnp.float32)
+    return jnp.maximum(latest - lags, floor)

@@ -13,7 +13,9 @@ from .aggregators import (  # noqa: F401
     weighted_median_1d,
     weighted_std,
 )
-from .attacks import ATTACKS, AttackConfig, byzantine_vector, flip_labels  # noqa: F401
+from .attacks import (ATTACKS, LOGIT_ATTACKS, AttackConfig,  # noqa: F401
+                      LogitAttackConfig, byzantine_vector, corrupt_logits,
+                      flip_labels)
 from .engine import (  # noqa: F401
     AsyncByzantineEngine,
     EngineConfig,

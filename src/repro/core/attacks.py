@@ -14,6 +14,16 @@ are coordinate-wise, hence leaf-separable, and the little-is-enough deviation
 ``label_flip`` is a data poisoning attack — it is applied inside the engine by
 flipping the labels (y -> 9 - y) before the gradient computation, so it has no
 entry here beyond the label transform helper.
+
+INFERENCE-TIME attacks (``LOGIT_ATTACKS`` / :func:`corrupt_logits`) are the
+serving-side counterpart used by ``repro.serve.replicated``: a Byzantine
+decode REPLICA corrupts the per-token logits it reports to the vote instead
+of a training update. The omniscient variants (``little``, ``empire``) read
+the honest replicas' logit rows with their staleness weights — the same
+weighted coordinate-wise statistics as the training attacks, per (slot,
+vocab) coordinate. Dead / hanging replicas and stale checkpoints are not
+logit transforms and are modeled by the replicated engine itself (vote-mass
+masking and checkpoint lag).
 """
 from __future__ import annotations
 
@@ -30,12 +40,28 @@ _tmap = jax.tree_util.tree_map
 
 ATTACKS = ("none", "sign_flip", "label_flip", "little", "empire")
 
+# Inference-time (replicated-serving) fault types. ``corrupt`` injects
+# large-magnitude noise into the replica's reported logits (corrupted
+# activations / logits); the rest mirror the training attacks on the logit
+# layout. ``dead`` / ``hang`` / ``stale`` live in the replicated engine: they
+# are availability / checkpoint faults, not logit transforms.
+LOGIT_ATTACKS = ("none", "corrupt", "sign_flip", "little", "empire")
+
 
 class AttackConfig(NamedTuple):
     name: str = "none"
     epsilon: float = 0.1     # empire scale
     z_max: Optional[float] = None  # little deviation; None -> derived from weights
     n_classes: int = 10      # label flip: y -> (C-1) - y
+
+
+class LogitAttackConfig(NamedTuple):
+    """Inference-time fault a Byzantine decode replica applies to the logits
+    it reports to the per-token vote (``repro.serve.replicated``)."""
+    name: str = "none"
+    epsilon: float = 1.0           # empire scale (logits are O(1): 1.0 bites)
+    z_max: Optional[float] = None  # little deviation; None -> from weights
+    noise_scale: float = 10.0      # corrupt: std of the injected logit noise
 
 
 def flip_labels(y: Array, n_classes: int = 10) -> Array:
@@ -94,3 +120,56 @@ def byzantine_vector(
                              jnp.sum(weights * (~honest_mask)))
         return _tmap(lambda m_, s_: m_ - z * s_, mu, sd)
     raise KeyError(f"unknown attack: {name}")
+
+
+def _bcast_rows(v: Array, x: Array) -> Array:
+    """Reshape an (R,) vector for broadcasting against an (R, ...) array."""
+    return v.reshape(v.shape + (1,) * (x.ndim - 1)).astype(jnp.float32)
+
+
+def corrupt_logits(
+    cfg: LogitAttackConfig,
+    logits: Array,            # (R, S, V) per-replica per-slot logit rows
+    honest_mask: Array,       # (R,) bool — True for honest replicas
+    weights: Array,           # (R,) vote masses (staleness-derived)
+    key: Array,               # PRNG key for the 'corrupt' noise draw
+) -> Array:
+    """Return the TRANSMITTED logit stack: honest rows pass through
+    unchanged, Byzantine rows are replaced per ``cfg.name``.
+
+    The omniscient attacks compute weighted mean/std over the honest
+    replicas' rows per (slot, vocab) coordinate — the serving analogue of
+    :func:`byzantine_vector`'s weighted statistics, with replicas in the
+    worker role and staleness weights in the update-count role. All honest
+    replicas fresh and identical drives the honest std to zero, so ``little``
+    degenerates to the honest value — it only bites when honest replicas
+    legitimately disagree (stale checkpoints)."""
+    name = cfg.name
+    if name == "none":
+        return logits
+    byz = _bcast_rows((~honest_mask).astype(jnp.float32), logits)
+    xf = logits.astype(jnp.float32)
+    if name == "sign_flip":
+        return jnp.where(byz > 0, -xf, xf)
+    if name == "corrupt":
+        noise = cfg.noise_scale * jax.random.normal(key, xf.shape, jnp.float32)
+        return jnp.where(byz > 0, xf + noise, xf)
+
+    hw = (weights.astype(jnp.float32) * honest_mask.astype(jnp.float32)
+          + 1e-30)
+    hw_sum = jnp.sum(hw)
+    mu = jnp.einsum("r,r...->...", hw, xf) / hw_sum
+    if name == "empire":
+        atk = -cfg.epsilon * mu
+    elif name == "little":
+        var = jnp.einsum("r,r...->...", hw, jnp.square(xf - mu)) / hw_sum
+        sd = jnp.sqrt(jnp.maximum(var, 0.0))
+        if cfg.z_max is not None:
+            z = jnp.asarray(cfg.z_max, jnp.float32)
+        else:
+            z = _little_zmax(jnp.sum(weights * honest_mask),
+                             jnp.sum(weights * (~honest_mask)))
+        atk = mu - z * sd
+    else:
+        raise KeyError(f"unknown logit attack: {name}")
+    return jnp.where(byz > 0, atk[None], xf)

@@ -396,3 +396,116 @@ def make_decode_slots_step(cfg: ModelConfig, temperature: float = 0.0,
         return nxt, cache
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Replicated (Byzantine-tolerant) serve path
+# ---------------------------------------------------------------------------
+
+def make_replicated_prefill_step(cfg: ModelConfig, max_len: int):
+    """step(params_stack, batch, lens) -> (logits (R, B, 1, V), cache_stack).
+
+    One jitted call prefills the SAME bucketed prompt batch through all R
+    replicas' parameters (stacked pytree, leaves (R, ...)), emitting the
+    per-replica slot caches stacked on a leading replica axis."""
+
+    def step(params_stack, batch: dict, lens: Array):
+        return jax.vmap(
+            lambda p: prefill(p, cfg, batch, max_len, lens=lens))(params_stack)
+
+    return step
+
+
+def vote_logits_fn(cfg, byz: Tuple[int, ...], n_replicas: int,
+                   vote: str = "cwmed", lam: float = 0.25,
+                   zeno_rho: float = 1e-3):
+    """Build ``(logits (R, S, V), weights (R,), key) -> (voted (S, V),
+    scores (R, S))`` — attack injection, robust vote, Zeno++-style pre-vote
+    scores, shared by the replicated decode and first-token paths.
+
+    ``cfg`` is a :class:`repro.core.attacks.LogitAttackConfig`. The score of
+    replica r on slot s is ``cos(l_rs, v_s) - rho·‖l_rs - v_s‖²/‖v_s‖²``
+    against the robust anchor v (the ω-CWMed of the transmitted stack) — an
+    agreeing replica scores ~1, a diverging one falls below 0; the engine
+    quarantines on a host-side threshold. The anchor is the same trick as
+    Zeno++'s oracle gradient: no trusted replica exists, so the robust vote
+    itself is the validation oracle."""
+    from repro.agg.logits import resolve_logits
+    from repro.core.attacks import corrupt_logits
+
+    vote_fn = resolve_logits(vote, lam=lam)
+    anchor_fn = (vote_fn if getattr(vote_fn.spec, "canonical", vote) == "cwmed"
+                 else resolve_logits("cwmed"))
+    honest = jnp.asarray([i not in byz for i in range(n_replicas)])
+
+    def run(logits: Array, weights: Array, key: Array):
+        lg = corrupt_logits(cfg, logits.astype(jnp.float32), honest, weights,
+                            key)
+        # A zero-mass replica (dead / hanging / quarantined) must not be able
+        # to touch the vote AT ALL — but a zero weight alone still lets its
+        # row perturb ω-CWMed's tie-averaging (the sorted value between two
+        # half-mass honest rows). Substitute unavailable rows with the
+        # highest-mass replica's row, so every value in the voted stack comes
+        # from a replica that actually holds mass.
+        avail = weights > 0
+        ref = jnp.take(lg, jnp.argmax(weights), axis=0)          # (S, V)
+        lv = jnp.where(avail[:, None, None], lg, ref[None])
+        v = anchor_fn(lv, weights)                               # (S, V)
+        voted = v if anchor_fn is vote_fn else vote_fn(lv, weights)
+        # scores come from the TRUE transmitted rows, so telemetry keeps
+        # showing an excluded replica's divergence
+        vnorm = jnp.sqrt(jnp.maximum(jnp.sum(jnp.square(v), -1), 1e-12))  # (S,)
+        lnorm = jnp.sqrt(jnp.maximum(jnp.sum(jnp.square(lg), -1), 1e-12))
+        inner = jnp.einsum("rsv,sv->rs", lg, v)
+        dist2 = jnp.sum(jnp.square(lg - v[None]), -1)            # (R, S)
+        scores = (inner / (lnorm * vnorm[None])
+                  - zeno_rho * dist2 / jnp.square(vnorm)[None])
+        return voted, scores
+
+    return run
+
+
+def make_replicated_decode_step(cfg: ModelConfig, n_replicas: int,
+                                attack, byz: Tuple[int, ...] = (),
+                                vote: str = "cwmed", lam: float = 0.25,
+                                zeno_rho: float = 1e-3,
+                                temperature: float = 0.0, top_k: int = 0,
+                                paged: bool = False):
+    """step(params_stack, cache_stack, tokens, req_keys, gen_idx, weights,
+    key[, page_table]) -> (next_tokens (S,), scores (R, S), cache_stack).
+
+    One continuous-batching decode step for ALL R replicas × S slots: the
+    per-replica decode is vmapped over the stacked params/cache (replica r's
+    KV cache lives at leaf row r), Byzantine replicas corrupt their reported
+    logits per ``attack`` (:class:`LogitAttackConfig`), and each slot's next
+    token is sampled from the ``vote``-aggregated logits weighted by the
+    runtime (R,) ``weights`` — staleness-derived masses with dead / hanging /
+    quarantined replicas zeroed by the engine, so availability changes never
+    recompile. ``scores`` are the Zeno++-style pre-vote scores the engine's
+    quarantine policy consumes host-side. Every replica decodes the voted
+    token regardless of its vote mass, which is what keeps a quarantined
+    replica's KV cache coherent for re-admission."""
+    run_vote = vote_logits_fn(attack, byz, n_replicas, vote=vote, lam=lam,
+                              zeno_rho=zeno_rho)
+
+    def body(params, cache, tokens, req_keys, gen_idx, weights, key,
+             page_table=None):
+        def one(p, c):
+            return decode_step(p, cfg, c, tokens, page_table=page_table)
+
+        logits, cache = jax.vmap(one)(params, cache)    # (R, S, 1, V)
+        voted, scores = run_vote(logits[:, :, 0, :], weights, key)
+        nxt = sample_next(voted, req_keys, gen_idx, temperature, top_k)
+        return nxt, scores, cache
+
+    if paged:
+        def step(params, cache, tokens, req_keys, gen_idx, weights, key,
+                 page_table):
+            return body(params, cache, tokens, req_keys, gen_idx, weights,
+                        key, page_table)
+        return step
+
+    def step(params, cache, tokens, req_keys, gen_idx, weights, key):
+        return body(params, cache, tokens, req_keys, gen_idx, weights, key)
+
+    return step

@@ -11,6 +11,16 @@ pool at dense-equivalent capacity), so cache HBM scales with actual request
 lengths and admission is page-budgeted — see serve/README.md for the layout
 and memory accounting.
 
+``--replicas R`` switches to the Byzantine-tolerant replicated engine
+(``repro.serve.replicated``): R decode replicas vote every token through the
+``--vote`` rule with staleness-derived weights (``--lags``), while
+``--byz-replicas`` + ``--attack`` inject corrupted logits and
+``--dead`` / ``--hang`` model availability faults; per-replica health and
+quarantine events are logged after the run.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+        --replicas 3 --byz-replicas 2 --attack sign_flip --requests 8
+
 Timings are reported split into compile (jit warmup), prefill and decode —
 the old single tokens/s figure folded all three together (including compile
 time) and is kept as ``combined_tok_s`` for back-compat.
@@ -23,9 +33,15 @@ import copy
 import jax
 
 from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.core.attacks import LOGIT_ATTACKS, LogitAttackConfig
 from repro.models.lm import init_lm
-from repro.serve import ServeConfig, ServeEngine, synth_workload
+from repro.serve import (ReplicatedConfig, ReplicatedServeEngine, ServeConfig,
+                         ServeEngine, synth_workload)
 from repro.utils import logger
+
+
+def _csv_ints(text: str):
+    return tuple(int(x) for x in text.split(",")) if text else ()
 
 
 def _log_report(rep) -> None:
@@ -70,6 +86,22 @@ def main(argv=None) -> dict:
                     help="KV rows per page (with --paged)")
     ap.add_argument("--pages", type=int, default=0,
                     help="physical pool pages; 0 = dense-equivalent capacity")
+    # Byzantine-tolerant replicated serving (repro.serve.replicated)
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="decode replicas voting each token; 0 = single engine")
+    ap.add_argument("--byz-replicas", default="",
+                    help="comma-separated Byzantine replica ids (e.g. 2 or 1,2)")
+    ap.add_argument("--attack", default="none", choices=list(LOGIT_ATTACKS),
+                    help="logit attack the Byzantine replicas transmit")
+    ap.add_argument("--lags", default="",
+                    help="comma-separated per-replica checkpoint staleness "
+                         "(versions behind); empty = all fresh")
+    ap.add_argument("--vote", default="cwmed",
+                    help="repro.agg spec for the per-token logit vote")
+    ap.add_argument("--dead", default="",
+                    help="comma-separated replica ids that stop responding")
+    ap.add_argument("--hang", default="",
+                    help="comma-separated replica ids that intermittently stall")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -94,11 +126,35 @@ def main(argv=None) -> dict:
 
     engines = (["continuous", "static"] if args.engine == "both"
                else [args.engine])
+    rcfg = None
+    if args.replicas > 0:
+        rcfg = ReplicatedConfig(
+            n_replicas=args.replicas, vote=args.vote,
+            attack=LogitAttackConfig(name=args.attack),
+            byz=_csv_ints(args.byz_replicas), lags=_csv_ints(args.lags),
+            dead=_csv_ints(args.dead), hang=_csv_ints(args.hang),
+            attack_seed=args.seed)
     reports = {}
     for name in engines:
         reqs = [copy.deepcopy(r) for r in workload]
-        rep = ServeEngine(cfg, params, scfg, engine=name).run(reqs)
+        if rcfg is not None:
+            rep = ReplicatedServeEngine(cfg, params, scfg, rcfg,
+                                        engine=name).run(reqs)
+        else:
+            rep = ServeEngine(cfg, params, scfg, engine=name).run(reqs)
         _log_report(rep)
+        if rcfg is not None:
+            for h in rep.replicas:
+                logger.info(
+                    "[%s] replica %d (%s, lag %.0f, mass %.2f): voted %d | "
+                    "missed %d | divergent %d | evictions %d | score %.3f",
+                    name, h["replica"], h["role"], h["lag"], h["weight"],
+                    h["tokens_voted"], h["tokens_missed"],
+                    h["divergent_tokens"], h["evictions"], h["mean_score"])
+            if rep.quarantine_events:
+                logger.info("[%s] quarantine events: %s (first at decode "
+                            "step %s)", name, rep.quarantine_events,
+                            rep.first_quarantine_step)
         reports[name] = rep
     if len(reports) == 2:
         c, s = reports["continuous"], reports["static"]

@@ -3,21 +3,29 @@
 Slot-mapped KV cache, dense or block-table paged (cache.py), bucketed FCFS
 admission scheduler with slot + page budgets (scheduler.py) and the
 ServeEngine (engine.py) driving jitted prefill → insert → decode-slots steps
-with per-request streaming outputs. See serve/README.md for the cache
-layouts and scheduling policy.
+with per-request streaming outputs. ``replicated.py`` layers the
+Byzantine-tolerant R-replica engine on top: per-token weighted robust logit
+voting (staleness-derived masses through ``repro.agg``) with fault injection
+and Zeno++-style quarantine. See serve/README.md for the cache layouts,
+scheduling policy and the vote pipeline.
 """
 from repro.serve.cache import (PageAllocator, SlotMap, init_paged_cache,
                                init_slot_cache, insert_prefill,
                                insert_prefill_paged, pages_per_slot,
                                slot_hbm_bytes)
 from repro.serve.engine import ServeConfig, ServeEngine, ServeReport, serve
+from repro.serve.replicated import (ReplicaHealth, ReplicatedConfig,
+                                    ReplicatedServeEngine,
+                                    ReplicatedServeReport, serve_replicated,
+                                    stale_params_stack)
 from repro.serve.scheduler import (PrefillPlan, Request, Scheduler,
                                    default_buckets, synth_workload)
 
 __all__ = [
-    "PageAllocator", "PrefillPlan", "Request", "Scheduler", "ServeConfig",
-    "ServeEngine", "ServeReport", "SlotMap", "default_buckets",
+    "PageAllocator", "PrefillPlan", "ReplicaHealth", "ReplicatedConfig",
+    "ReplicatedServeEngine", "ReplicatedServeReport", "Request", "Scheduler",
+    "ServeConfig", "ServeEngine", "ServeReport", "SlotMap", "default_buckets",
     "init_paged_cache", "init_slot_cache", "insert_prefill",
-    "insert_prefill_paged", "pages_per_slot", "serve", "slot_hbm_bytes",
-    "synth_workload",
+    "insert_prefill_paged", "pages_per_slot", "serve", "serve_replicated",
+    "slot_hbm_bytes", "stale_params_stack", "synth_workload",
 ]

@@ -214,14 +214,29 @@ class ServeEngine:
 
     def _validate(self, req: Request) -> None:
         """Admission constraints — shared by submit() and run()'s fail-fast
-        pre-check so acceptance can never diverge between the two."""
+        pre-check so acceptance can never diverge between the two. Degenerate
+        requests are rejected HERE, at submit time, with the uid in the
+        message — never deep inside a prefill plan mid-serve."""
+        toks = np.asarray(req.tokens)
+        if toks.ndim != 1:
+            raise ValueError(
+                f"request {req.uid}: tokens must be a 1-D int sequence, "
+                f"got shape {toks.shape}")
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+        if req.prompt_len > self.sched.buckets[-1]:
+            raise ValueError(
+                f"request {req.uid}: prompt length {req.prompt_len} exceeds "
+                f"the largest prefill bucket {self.sched.buckets[-1]}")
         if self._positions(req) + req.max_new_tokens > self.scfg.max_len:
             raise ValueError(
                 f"request {req.uid}: prompt ({self._positions(req)}) + "
                 f"max_new ({req.max_new_tokens}) exceeds max_len "
                 f"{self.scfg.max_len}")
-        if req.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
         if self.paged and self._pages_for(req) > self.pager.n_pages:
             raise ValueError(
                 f"request {req.uid}: needs {self._pages_for(req)} pages "

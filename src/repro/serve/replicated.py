@@ -1,0 +1,395 @@
+"""Byzantine-tolerant replicated decode — weighted robust logit voting.
+
+``ReplicatedServeEngine`` unites the two halves of the repo: it runs R decode
+replicas of the serving engine (stacked params + per-replica KV caches, one
+vmapped jitted step decodes all of them) and resolves every token's logits
+through the unified ``repro.agg`` registry, weighted by per-replica
+checkpoint STALENESS exactly as the paper weights asynchronous updates by
+delay (``agg.staleness_weights``: a replica at version ``latest - lag``
+carries mass ``latest - lag``).
+
+Pipeline, per decoded token::
+
+    params_stack (R, ...) ──┐
+    cache_stack  (R, ...) ──┴─► vmapped decode ─► logits (R, S, V)
+                                     │
+                       corrupt_logits (core.attacks): Byzantine replicas
+                       transform their reported rows (corrupt / sign_flip /
+                       little / empire); dead / hanging replicas miss the
+                       vote (mass 0); stale replicas serve old checkpoints
+                                     │
+                   ω-vote: agg.resolve_logits(vote)(logits, weights)
+                   weights = staleness masses × availability × quarantine
+                                     │
+                   Zeno++-style pre-vote scores vs the robust anchor
+                   (host-side quarantine: strikes → evict → backoff → readmit)
+                                     │
+                            sample_next ─► ONE voted token, fed back to
+                            every replica (keeps all R caches coherent)
+
+Graceful degradation: a replica whose score stays under
+``zeno_threshold`` for ``quarantine_after`` consecutive decode steps is
+evicted from the vote (mass 0) for ``readmit_after`` steps, doubling per
+repeat eviction (``backoff_factor``); it keeps decoding the voted stream
+while quarantined so its KV cache is valid on re-admission. Per-replica
+health (votes, divergent tokens, evictions, mean score) lands in
+:class:`ReplicatedServeReport`.
+
+Correctness anchor (pinned in tests/test_replicated_serve.py): with all
+replicas honest and fresh, greedy streams are TOKEN-IDENTICAL to the
+single-replica ``ServeEngine`` — the vmapped decode is bitwise-equal per
+replica and every robust rule returns the common row of an identical stack.
+With f < R/2 Byzantine vote mass the weighted median's crossing stays inside
+the honest mass, so the voted greedy stream still matches the honest one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agg.logits import staleness_weights
+from repro.core.attacks import LOGIT_ATTACKS, LogitAttackConfig
+from repro.dist.steps import (make_replicated_decode_step,
+                              make_replicated_prefill_step, sample_next,
+                              vote_logits_fn)
+from repro.models.config import ModelConfig
+from repro.serve.cache import insert_prefill, insert_prefill_paged
+from repro.serve.engine import ServeConfig, ServeEngine, ServeReport
+
+Pytree = Any
+
+_tmap = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicatedConfig:
+    """Replica fleet + fault plan + vote / quarantine policy."""
+    n_replicas: int = 3
+    vote: str = "cwmed"            # repro.agg spec for the per-token vote
+    lam: float = 0.25              # λ for meta-rules (ctma:..., zeno)
+    # fault injection
+    attack: LogitAttackConfig = LogitAttackConfig()
+    byz: Tuple[int, ...] = ()      # replicas transmitting corrupted logits
+    lags: Tuple[int, ...] = ()     # per-replica checkpoint staleness; () = fresh
+    latest_version: Optional[float] = None  # staleness_weights reference
+    dead: Tuple[int, ...] = ()     # replicas that stop responding...
+    dead_after: int = 0            # ...from this decode step on
+    hang: Tuple[int, ...] = ()     # replicas with intermittent stalls: they
+    hang_period: int = 4           # miss every hang_period-th vote
+    # graceful degradation (Zeno++-style pre-vote gate)
+    zeno_rho: float = 1e-3
+    zeno_threshold: float = 0.5    # score below this = divergent token
+    quarantine_after: int = 3      # consecutive divergent tokens -> evict
+    readmit_after: int = 32        # base backoff (decode steps)
+    backoff_factor: float = 2.0    # backoff multiplier per repeat eviction
+    attack_seed: int = 0           # PRNG seed for the 'corrupt' noise draws
+
+    def role(self, r: int) -> str:
+        if r in self.byz:
+            return "byzantine"
+        if r in self.dead:
+            return "dead"
+        if r in self.hang:
+            return "hanging"
+        return "honest"
+
+    def validate(self) -> None:
+        R = self.n_replicas
+        if R < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if self.attack.name not in LOGIT_ATTACKS:
+            raise ValueError(f"unknown logit attack {self.attack.name!r}; "
+                             f"choose from {LOGIT_ATTACKS}")
+        for label, ids in (("byz", self.byz), ("dead", self.dead),
+                           ("hang", self.hang)):
+            bad = [i for i in ids if not 0 <= i < R]
+            if bad:
+                raise ValueError(f"{label} replica ids {bad} out of range "
+                                 f"for n_replicas={R}")
+        if self.lags and len(self.lags) != R:
+            raise ValueError(f"lags must have one entry per replica "
+                             f"({len(self.lags)} != {R})")
+        if self.hang_period < 2:
+            raise ValueError("hang_period must be >= 2")
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """Host-side health record for one replica (rides in the report)."""
+    replica: int
+    role: str
+    lag: float = 0.0
+    weight: float = 0.0            # staleness-derived base vote mass
+    tokens_voted: int = 0          # decode votes it held mass in
+    tokens_missed: int = 0         # votes missed (dead / hanging)
+    divergent_tokens: int = 0      # votes scored under the zeno threshold
+    strikes: int = 0               # current consecutive divergent tokens
+    quarantined: bool = False
+    quarantined_tokens: int = 0
+    evictions: int = 0
+    backoff_remaining: int = 0
+    first_eviction_step: Optional[int] = None
+    score_sum: float = 0.0
+    score_n: int = 0
+
+    @property
+    def mean_score(self) -> float:
+        return self.score_sum / self.score_n if self.score_n else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("score_sum"), d.pop("score_n"), d.pop("strikes")
+        d["mean_score"] = round(self.mean_score, 4)
+        return d
+
+
+@dataclasses.dataclass
+class ReplicatedServeReport(ServeReport):
+    n_replicas: int = 0
+    vote: str = ""
+    attack: str = "none"
+    replicas: List[dict] = dataclasses.field(default_factory=list)
+    quarantine_events: List[dict] = dataclasses.field(default_factory=list)
+    first_quarantine_step: Optional[int] = None  # decode steps to first evict
+
+
+def stale_params_stack(params: Pytree, lags: Sequence[int], key,
+                       drift: float = 1e-3) -> Pytree:
+    """Stacked params (leaves (R, ...)) simulating a checkpoint shelf.
+
+    Checkpoint version ``latest - L`` is the fresh ``params`` minus a shared
+    Gaussian random walk of L steps of per-leaf scale ``drift`` — the SAME
+    walk for every replica, so two replicas at the same lag serve the
+    identical checkpoint (the heterogeneous-but-honest regime of Fixing by
+    Mixing: honest replicas legitimately disagree, yet agree within a lag
+    class)."""
+    lags = [int(l) for l in lags]
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    deltas = [np.zeros(l.shape, np.float32) for l in leaves]
+    shelf = {0: [np.zeros(l.shape, np.float32) for l in leaves]}
+    for step in range(1, max(lags) + 1 if lags else 1):
+        ks = jax.random.split(jax.random.fold_in(key, step), len(leaves))
+        deltas = [d + drift * np.asarray(jax.random.normal(k, l.shape))
+                  for d, k, l in zip(deltas, ks, leaves)]
+        shelf[step] = [d.copy() for d in deltas]
+    rows = []
+    for lag in lags:
+        rows.append(jax.tree_util.tree_unflatten(
+            treedef, [(np.asarray(l, np.float32) - d).astype(l.dtype)
+                      for l, d in zip(leaves, shelf[lag])]))
+    return _tmap(lambda *ls: jnp.stack(ls), *rows)
+
+
+def _stack_params(params: Union[Pytree, Sequence[Pytree]], R: int) -> Pytree:
+    """Stack a list of R replica checkpoints, or broadcast a single one."""
+    if isinstance(params, (list, tuple)):
+        if len(params) != R:
+            raise ValueError(f"got {len(params)} replica params for "
+                             f"n_replicas={R}")
+        return _tmap(lambda *ls: jnp.stack(ls), *params)
+    return _tmap(lambda l: jnp.broadcast_to(l[None], (R,) + l.shape).copy(),
+                 params)
+
+
+class ReplicatedServeEngine(ServeEngine):
+    """R-replica serving engine with per-token weighted robust logit voting.
+
+    ``params`` may be a single pytree (broadcast to R fresh replicas), a list
+    of R per-replica checkpoints, or — with ``rcfg.lags`` set — a single
+    fresh pytree that :func:`stale_params_stack` turns into a simulated
+    checkpoint shelf. Inherits admission, scheduling, paging and metrics
+    from :class:`ServeEngine`; only the jitted steps (vmapped over the
+    replica axis) and the vote/health layer differ."""
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
+                 rcfg: ReplicatedConfig = ReplicatedConfig(),
+                 engine: str = "continuous", mesh=None):
+        if mesh is not None:
+            raise NotImplementedError("replicated serving + mesh: the replica "
+                                      "axis is not wired into the shardings")
+        rcfg.validate()
+        self.rcfg = rcfg
+        R = rcfg.n_replicas
+        if isinstance(params, (list, tuple)):
+            base_params = params[0]
+            params_stack = _stack_params(params, R)
+        elif rcfg.lags and any(rcfg.lags):
+            base_params = params
+            params_stack = stale_params_stack(
+                params, rcfg.lags, jax.random.PRNGKey(rcfg.attack_seed))
+        else:
+            base_params = params
+            params_stack = _stack_params(params, R)
+
+        super().__init__(cfg, base_params, scfg, engine=engine)
+
+        # replicated report + staleness-derived base vote masses
+        self.report = ReplicatedServeReport(
+            engine=engine, paged=self.paged, n_replicas=R, vote=rcfg.vote,
+            attack=rcfg.attack.name)
+        if self.paged:
+            self.report.page_size = scfg.page_size
+            self.report.n_pages = self.pager.n_pages
+        lags = rcfg.lags or tuple(0 for _ in range(R))
+        self._base_w = np.asarray(
+            staleness_weights(lags, rcfg.latest_version), np.float32)
+        self.health = [
+            ReplicaHealth(replica=r, role=rcfg.role(r), lag=float(lags[r]),
+                          weight=float(self._base_w[r])) for r in range(R)]
+
+        # swap the jitted steps for their replicated (vmapped) versions
+        self.params = params_stack
+        self.cache = _tmap(
+            lambda l: jnp.zeros((R,) + l.shape, l.dtype), self.cache)
+        self._prefill = jax.jit(make_replicated_prefill_step(cfg, scfg.max_len))
+        if self.paged:
+            ins = functools.partial(insert_prefill_paged, cfg, scfg.page_size)
+            self._insert = jax.jit(
+                jax.vmap(ins, in_axes=(0, 0, None, None)),
+                donate_argnums=(0,))
+        else:
+            self._insert = jax.jit(jax.vmap(insert_prefill,
+                                            in_axes=(0, 0, None)),
+                                   donate_argnums=(0,))
+        self._decode_jit = jax.jit(
+            make_replicated_decode_step(
+                cfg, R, rcfg.attack, byz=rcfg.byz, vote=rcfg.vote,
+                lam=rcfg.lam, zeno_rho=rcfg.zeno_rho,
+                temperature=scfg.temperature, top_k=scfg.top_k,
+                paged=self.paged),
+            donate_argnums=(1,))
+        self._decode = self._voted_decode
+
+        vote_first = vote_logits_fn(rcfg.attack, rcfg.byz, R, vote=rcfg.vote,
+                                    lam=rcfg.lam, zeno_rho=rcfg.zeno_rho)
+        t, k = scfg.temperature, scfg.top_k
+
+        def first_voted(logits, req_keys, weights, akey):
+            voted, scores = vote_first(logits[:, :, 0, :], weights, akey)
+            nxt = sample_next(voted, req_keys,
+                              jnp.zeros(req_keys.shape[0], jnp.int32), t, k)
+            return nxt, scores
+
+        self._first_jit = jax.jit(first_voted)
+        self._first = self._voted_first
+
+        self._attack_key = jax.random.PRNGKey(rcfg.attack_seed)
+        self._attack_ctr = 0
+        self._last_scores: Optional[np.ndarray] = None
+        # warmup() drives _decode directly (no _decode_tick around it)
+        self._w_now = self._base_w.copy()
+
+    # ------------------------------------------------------------------
+    # runtime vote mass: staleness × availability × quarantine
+    # ------------------------------------------------------------------
+
+    def _vote_weights(self) -> np.ndarray:
+        t = self.report.decode_steps       # index of the upcoming decode step
+        w = self._base_w.copy()
+        for r in self.rcfg.dead:
+            if t >= self.rcfg.dead_after:
+                w[r] = 0.0
+        for r in self.rcfg.hang:
+            if t % self.rcfg.hang_period == self.rcfg.hang_period - 1:
+                w[r] = 0.0
+        for h in self.health:
+            if h.quarantined:
+                w[h.replica] = 0.0
+        if w.sum() <= 0.0:
+            # never vote with zero total mass: a fully degraded fleet falls
+            # back to the raw staleness masses (all replicas re-enter)
+            w = self._base_w.copy()
+        return w
+
+    def _next_attack_key(self):
+        k = jax.random.fold_in(self._attack_key, self._attack_ctr)
+        self._attack_ctr += 1
+        return k
+
+    # ------------------------------------------------------------------
+    # jitted-step adapters (base-engine call signatures)
+    # ------------------------------------------------------------------
+
+    def _voted_first(self, logits, req_keys):
+        nxt, scores = self._first_jit(logits, req_keys,
+                                      jnp.asarray(self._vote_weights()),
+                                      self._next_attack_key())
+        return nxt
+
+    def _voted_decode(self, params, cache, tokens, req_keys, gen_idx, *rest):
+        nxt, scores, cache = self._decode_jit(
+            params, cache, tokens, req_keys, gen_idx,
+            jnp.asarray(self._w_now), self._next_attack_key(), *rest)
+        self._last_scores = scores
+        return nxt, cache
+
+    # ------------------------------------------------------------------
+    # decode tick + quarantine policy
+    # ------------------------------------------------------------------
+
+    def _decode_tick(self) -> None:
+        self._w_now = self._vote_weights()
+        active = [s for s, r in self.slot_req.items() if not r.done]
+        super()._decode_tick()
+        if active and self._last_scores is not None:
+            self._update_health(self._w_now, active,
+                                np.asarray(self._last_scores))
+
+    def _update_health(self, w: np.ndarray, active: List[int],
+                       scores: np.ndarray) -> None:
+        rc = self.rcfg
+        step = self.report.decode_steps    # step just completed (1-based)
+        for h in self.health:
+            r = h.replica
+            if h.quarantined:
+                h.quarantined_tokens += 1
+                h.backoff_remaining -= 1
+                if h.backoff_remaining <= 0:
+                    h.quarantined = False   # re-admission (probation: one
+                    h.strikes = 0           # fresh run of strikes)
+                continue
+            if w[r] <= 0.0:                 # dead / hanging this step
+                h.tokens_missed += 1
+                continue
+            sc = float(np.median(scores[r, active]))
+            h.tokens_voted += 1
+            h.score_sum += sc
+            h.score_n += 1
+            if sc < rc.zeno_threshold:
+                h.strikes += 1
+                h.divergent_tokens += 1
+            else:
+                h.strikes = 0
+            if h.strikes >= rc.quarantine_after:
+                h.quarantined = True
+                h.evictions += 1
+                h.strikes = 0
+                h.backoff_remaining = int(
+                    rc.readmit_after * rc.backoff_factor ** (h.evictions - 1))
+                if h.first_eviction_step is None:
+                    h.first_eviction_step = step
+                self.report.quarantine_events.append(
+                    {"replica": r, "step": step,
+                     "backoff": h.backoff_remaining})
+
+    def _finalize(self, reqs) -> ReplicatedServeReport:
+        rep = super()._finalize(reqs)
+        rep.replicas = [h.as_dict() for h in self.health]
+        evicts = [h.first_eviction_step for h in self.health
+                  if h.first_eviction_step is not None]
+        rep.first_quarantine_step = min(evicts) if evicts else None
+        return rep
+
+
+def serve_replicated(cfg: ModelConfig, params, requests,
+                     scfg: ServeConfig, rcfg: ReplicatedConfig,
+                     engine: str = "continuous",
+                     warmup: bool = True) -> ReplicatedServeReport:
+    """One-shot helper mirroring :func:`repro.serve.engine.serve`."""
+    eng = ReplicatedServeEngine(cfg, params, scfg, rcfg, engine=engine)
+    return eng.run(requests, warmup=warmup)

@@ -135,8 +135,16 @@ def synth_workload(n_requests: int, vocab: int, *, seed: int = 0,
     static batch, where every short request pays for the longest one.
     ``rate`` > 0 gives Poisson arrivals (exponential inter-arrival gaps at
     ``rate`` req/s); 0 means everything arrives at t = 0. ``n_patches`` > 0
-    attaches standard-normal vision-frontend embeddings of width d_model."""
-    rng = np.random.default_rng(seed)
+    attaches standard-normal vision-frontend embeddings of width d_model.
+
+    Fully seed-deterministic: every draw category (arrivals, generation
+    lengths, prompt lengths, prompt tokens, patches) gets its own
+    ``default_rng([seed, k])`` stream, so the SAME seed yields the SAME
+    prompts and lengths regardless of ``rate`` or ``n_patches`` — an
+    arrival-rate A/B or a vision variant of a workload compares identical
+    requests, and two calls with equal arguments are always identical."""
+    r_arr, r_gen, r_plen, r_tok, r_pat = (
+        np.random.default_rng([seed, k]) for k in range(5))
     lo_p, hi_p = prompt_lens
     lo_g, hi_g = gen_lens
     span = max(1, (hi_g - lo_g) // 4)
@@ -144,14 +152,14 @@ def synth_workload(n_requests: int, vocab: int, *, seed: int = 0,
     reqs: List[Request] = []
     for uid in range(n_requests):
         if rate > 0:
-            t += float(rng.exponential(1.0 / rate))
-        short = rng.random() < short_frac
-        gen = (int(rng.integers(lo_g, lo_g + span + 1)) if short
-               else int(rng.integers(hi_g - span, hi_g + 1)))
-        plen = int(rng.integers(lo_p, hi_p + 1))
-        patches = (rng.standard_normal((n_patches, d_model)).astype(np.float32)
-                   if n_patches else None)
+            t += float(r_arr.exponential(1.0 / rate))
+        short = r_gen.random() < short_frac
+        gen = (int(r_gen.integers(lo_g, lo_g + span + 1)) if short
+               else int(r_gen.integers(hi_g - span, hi_g + 1)))
+        plen = int(r_plen.integers(lo_p, hi_p + 1))
+        patches = (r_pat.standard_normal((n_patches, d_model))
+                   .astype(np.float32) if n_patches else None)
         reqs.append(Request(
             uid=uid, arrival=t, max_new_tokens=gen, patches=patches,
-            tokens=rng.integers(0, vocab, (plen,)).astype(np.int32)))
+            tokens=r_tok.integers(0, vocab, (plen,)).astype(np.int32)))
     return reqs

@@ -1,9 +1,13 @@
-"""Attack suite tests (Appendix D adaptations)."""
+"""Attack suite tests (Appendix D adaptations + inference-time variants)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core import AttackConfig, byzantine_vector, flip_labels, weighted_mean, weighted_std
+from repro.core import (ATTACKS, LOGIT_ATTACKS, AttackConfig,
+                        LogitAttackConfig, byzantine_vector, corrupt_logits,
+                        flip_labels, weighted_mean, weighted_std)
+from repro.core.attacks import _little_zmax
 
 
 def _setup(m=8, d=16, seed=0):
@@ -84,3 +88,127 @@ def test_attack_parity_engine_vs_group_step():
         # honest rows pass through untouched
         np.testing.assert_allclose(
             np.asarray(spliced[honest]), np.asarray(D[honest]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# full sweep: every attack × both layouts × the m=1 edge case, pinning the
+# transmitted update's shape and dtype
+# ---------------------------------------------------------------------------
+
+def _pytree_setup(m, d=6, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    tree = {"w": jax.random.normal(k1, (m, d, 2)),
+            "b": jax.random.normal(k2, (m, d)).astype(jnp.bfloat16)}
+    n_byz = 0 if m == 1 else max(1, m // 4)
+    honest = jnp.asarray([True] * (m - n_byz) + [False] * n_byz)
+    s = jnp.arange(1, m + 1, dtype=jnp.float32)
+    own = jax.tree_util.tree_map(lambda l: l[-1], tree)
+    return tree, honest, s, own
+
+
+@pytest.mark.parametrize("name", ATTACKS)
+@pytest.mark.parametrize("layout", ["flat", "pytree"])
+@pytest.mark.parametrize("m", [1, 8])
+def test_byzantine_vector_shapes_dtypes(name, layout, m):
+    """byzantine_vector returns the OWN-UPDATE layout for every attack,
+    every buffer layout, down to the degenerate single-worker fleet."""
+    if layout == "flat":
+        k = jax.random.PRNGKey(0)
+        D = jax.random.normal(k, (m, 5))
+        honest = jnp.asarray([True] * max(1, m - 1) + [False] * min(1, m - 1))
+        s = jnp.arange(1, m + 1, dtype=jnp.float32)
+        own = D[-1]
+    else:
+        D, honest, s, own = _pytree_setup(m)
+    out = byzantine_vector(AttackConfig(name), D, honest, s, own)
+    o_l, o_t = jax.tree_util.tree_flatten(out)
+    w_l, w_t = jax.tree_util.tree_flatten(own)
+    assert o_t == w_t
+    for o, w in zip(o_l, w_l):
+        assert o.shape == w.shape, (name, layout, m)
+        assert not np.any(np.isnan(np.asarray(o, np.float32))), (name, layout, m)
+    if name in ("none", "label_flip", "sign_flip"):
+        # pass-through / negation preserve the input dtype exactly
+        for o, w in zip(o_l, w_l):
+            assert o.dtype == w.dtype, (name, layout, m)
+
+
+def test_little_zmax_monotone_in_update_count():
+    """z_max grows with the BYZANTINE update mass and shrinks with the honest
+    mass: phi = (n-b-s)/(n-b) with s = floor(n/2+1)-b, i.e. roughly
+    1/2 + (b-2)/(2h) — the larger the attacker's share of the vote mass, the
+    smaller the supporting quorum it must hide inside, so the further it can
+    deviate (paper Appendix D, adapted to update counts)."""
+    byz = jnp.asarray([4.0, 8.0, 16.0, 24.0])
+    z_b = np.asarray(jax.vmap(lambda b: _little_zmax(64.0, b))(byz))
+    assert np.all(np.diff(z_b) > 0), z_b
+    honest = jnp.asarray([16.0, 32.0, 64.0, 128.0])
+    z_h = np.asarray(jax.vmap(lambda h: _little_zmax(h, 8.0))(honest))
+    assert np.all(np.diff(z_h) < 0), z_h
+    # and it is finite even in the degenerate all-Byzantine corner
+    assert np.isfinite(float(_little_zmax(jnp.float32(0.0), jnp.float32(3.0))))
+
+
+# ---------------------------------------------------------------------------
+# inference-time logit attacks (corrupt_logits) — replicated-serving suite
+# ---------------------------------------------------------------------------
+
+def _logit_setup(R=4, S=3, V=8, seed=0):
+    lg = jax.random.normal(jax.random.PRNGKey(seed), (R, S, V))
+    honest = jnp.asarray([True] * (R - 1) + [False])
+    s = jnp.arange(1, R + 1, dtype=jnp.float32)
+    return lg, honest, s
+
+
+@pytest.mark.parametrize("name", LOGIT_ATTACKS)
+def test_corrupt_logits_honest_rows_untouched(name):
+    lg, honest, s = _logit_setup()
+    out = corrupt_logits(LogitAttackConfig(name), lg, honest, s,
+                         jax.random.PRNGKey(1))
+    assert out.shape == lg.shape
+    assert out.dtype == jnp.float32
+    h = np.asarray(honest)
+    np.testing.assert_allclose(np.asarray(out)[h], np.asarray(lg)[h],
+                               rtol=1e-6)
+    if name != "none":
+        # the Byzantine row actually transmits something else
+        assert not np.allclose(np.asarray(out)[~h], np.asarray(lg)[~h])
+
+
+def test_corrupt_logits_transforms():
+    lg, honest, s = _logit_setup()
+    hw = np.asarray(s * honest)
+    mu = np.einsum("r,rsv->sv", hw, np.asarray(lg)) / hw.sum()
+    var = np.einsum("r,rsv->sv", hw,
+                    np.square(np.asarray(lg) - mu)) / hw.sum()
+    byz = np.asarray(~honest)
+
+    out = corrupt_logits(LogitAttackConfig("sign_flip"), lg, honest, s,
+                         jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(out)[byz], -np.asarray(lg)[byz],
+                               rtol=1e-6)
+    out = corrupt_logits(LogitAttackConfig("empire", epsilon=0.5), lg, honest,
+                         s, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(out)[byz][0], -0.5 * mu, rtol=1e-5)
+    out = corrupt_logits(LogitAttackConfig("little", z_max=2.0), lg, honest,
+                         s, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(out)[byz][0],
+                               mu - 2.0 * np.sqrt(var), rtol=1e-4, atol=1e-5)
+    # corrupt: noise of the configured scale lands on the byz row only
+    out = corrupt_logits(LogitAttackConfig("corrupt", noise_scale=100.0), lg,
+                         honest, s, jax.random.PRNGKey(1))
+    delta = np.asarray(out)[byz] - np.asarray(lg)[byz]
+    assert np.abs(delta).max() > 10.0
+
+
+def test_corrupt_logits_identical_honest_little_degenerates():
+    """Honest replicas fresh + identical => honest std 0 => little's transmit
+    IS the honest row (documented: it only bites under honest disagreement)."""
+    row = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 8))
+    lg = jnp.broadcast_to(row, (3, 2, 8))
+    honest = jnp.asarray([True, True, False])
+    s = jnp.ones((3,))
+    out = corrupt_logits(LogitAttackConfig("little"), lg, honest, s,
+                         jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(out)[2], np.asarray(row)[0],
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,289 @@
+"""repro.serve.replicated: Byzantine-tolerant replicated decode.
+
+The load-bearing properties:
+
+- honest-fresh parity — with all replicas honest and fresh, the voted
+  greedy stream is TOKEN-IDENTICAL to the single-replica ServeEngine,
+  across every decode-capable arch and both cache layouts (the vmapped
+  replica decode is bitwise-equal per replica, and every robust rule
+  returns the common row of an identical stack);
+- fault masking — with f < R/2 Byzantine vote mass under every logit
+  attack, and with dead / hanging / stale-checkpoint replicas, the voted
+  stream still matches the honest one;
+- graceful degradation — the Zeno++-style pre-vote gate quarantines a
+  persistently divergent replica within ``quarantine_after`` decode steps,
+  re-admits it after backoff with a coherent KV cache, and reports
+  per-replica health;
+- units — staleness_weights maps lag to the paper's update-count masses
+  and resolve_logits is exactly the flat rule vmapped over slots.
+"""
+import copy
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import resolve, resolve_logits, staleness_weights
+from repro.core.attacks import LogitAttackConfig
+from repro.models import ModelConfig, init_lm
+from repro.serve import (ReplicatedConfig, ReplicatedServeEngine, Request,
+                         ServeConfig, ServeEngine, stale_params_stack,
+                         synth_workload)
+
+V = 64
+MAXLEN = 32
+
+CFGS = [
+    ModelConfig(name="dense", n_layers=2, d_model=32, n_heads=4, n_kv=2,
+                d_ff=64, vocab=V, qkv_bias=True),
+    ModelConfig(name="swa", n_layers=6, d_model=32, n_heads=4, n_kv=2,
+                d_ff=64, vocab=V, window=4, global_every=3),
+    ModelConfig(name="ssm", arch_type="ssm", n_layers=2, d_model=32,
+                n_heads=1, n_kv=1, d_ff=0, vocab=V, ssm_state=8,
+                ssm_head_dim=16, ssm_chunk=4),
+    ModelConfig(name="hyb", arch_type="hybrid", n_layers=6, d_model=32,
+                n_heads=4, n_kv=1, d_ff=64, vocab=V,
+                block_pattern=("rec", "rec", "local"), window=4, lru_width=32),
+    ModelConfig(name="moe", arch_type="moe", n_layers=2, d_model=32,
+                n_heads=4, n_kv=4, d_ff=64, vocab=V, n_experts=4, top_k=2,
+                n_shared=1, d_expert=32, capacity_factor=8.0),
+]
+DENSE = CFGS[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _params(cfg_name: str):
+    cfg = next(c for c in CFGS if c.name == cfg_name)
+    return cfg, init_lm(jax.random.PRNGKey(0), cfg)
+
+
+def _scfg(**kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", MAXLEN)
+    kw.setdefault("max_prefill_batch", 2)
+    return ServeConfig(**kw)
+
+
+def _workload(n=6, seed=0):
+    return synth_workload(n, V, seed=seed, prompt_lens=(4, 12),
+                          gen_lens=(2, 6), rate=0.0)
+
+
+def _run(engine_cls, cfg, params, scfg, *args, reqs=None):
+    reqs = [copy.deepcopy(r) for r in (reqs or _workload())]
+    return engine_cls(cfg, params, scfg, *args).run(reqs)
+
+
+@functools.lru_cache(maxsize=None)
+def _honest(cfg_name: str):
+    cfg, params = _params(cfg_name)
+    return _run(ServeEngine, cfg, params, _scfg()).outputs
+
+
+# ---------------------------------------------------------------------------
+# honest-fresh parity: voted stream == single-replica stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_honest_fresh_parity_all_archs(cfg):
+    cfg, params = _params(cfg.name)
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=2))
+    assert rep.outputs == _honest(cfg.name)
+    assert all(h["evictions"] == 0 for h in rep.replicas)
+
+
+def test_honest_fresh_parity_paged():
+    cfg, params = _params("dense")
+    scfg = _scfg(paged=True, page_size=8)
+    single = _run(ServeEngine, cfg, params, scfg)
+    rep = _run(ReplicatedServeEngine, cfg, params, scfg,
+               ReplicatedConfig(n_replicas=2))
+    assert rep.outputs == single.outputs
+
+
+def test_per_replica_checkpoints_accepted():
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=2), reqs=_workload())
+    # a list of R per-replica checkpoints is the same as broadcasting one
+    rep2 = ReplicatedServeEngine(cfg, [params, params], _scfg(),
+                                 ReplicatedConfig(n_replicas=2)
+                                 ).run([copy.deepcopy(r) for r in _workload()])
+    assert rep.outputs == rep2.outputs
+
+
+# ---------------------------------------------------------------------------
+# fault masking: f < R/2 Byzantine / dead / hanging / stale replicas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("attack", ["corrupt", "sign_flip", "little", "empire"])
+def test_byzantine_attack_masked(attack):
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=3, byz=(2,),
+                                attack=LogitAttackConfig(name=attack)))
+    assert rep.outputs == _honest("dense"), attack
+    assert rep.attack == attack
+    # the transmitted corruption is visible in the byz replica's health
+    # (except little, which degenerates on identical-fresh honest replicas)
+    if attack != "little":
+        assert rep.replicas[2]["divergent_tokens"] > 0
+
+
+def test_dead_and_hanging_replicas_masked():
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=3, dead=(1,), dead_after=2,
+                                hang=(2,), hang_period=3))
+    assert rep.outputs == _honest("dense")
+    assert rep.replicas[1]["tokens_missed"] > 0
+    assert rep.replicas[2]["tokens_missed"] > 0
+    assert rep.replicas[0]["tokens_missed"] == 0
+
+
+def test_stale_minority_voted_out():
+    """Two fresh replicas + one 3-versions-stale replica: the fresh majority
+    mass (4+4 vs 1) votes the fresh stream even though the stale replica's
+    checkpoint genuinely differs."""
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=3, lags=(0, 0, 3)))
+    assert rep.outputs == _honest("dense")
+    assert [h["weight"] for h in rep.replicas] == [4.0, 4.0, 1.0]
+
+
+def test_stale_plus_byzantine_combined():
+    """The acceptance regime: stale-but-honest heterogeneity AND a Byzantine
+    replica at once — the weighted vote still recovers the fresh stream."""
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=4, lags=(0, 0, 2, 0), byz=(3,),
+                                attack=LogitAttackConfig(name="sign_flip")))
+    assert rep.outputs == _honest("dense")
+
+
+def test_stale_params_stack_shelf():
+    cfg, params = _params("dense")
+    stack = stale_params_stack(params, [0, 2, 2], jax.random.PRNGKey(1))
+    lv = jax.tree_util.tree_leaves(stack)
+    pv = jax.tree_util.tree_leaves(params)
+    for s, p in zip(lv, pv):
+        assert s.shape == (3,) + p.shape
+        # lag 0 IS the fresh checkpoint; equal lags = identical checkpoints
+        np.testing.assert_array_equal(np.asarray(s[0]), np.asarray(p))
+        np.testing.assert_array_equal(np.asarray(s[1]), np.asarray(s[2]))
+    assert any(not np.allclose(np.asarray(s[1]), np.asarray(s[0]))
+               for s in lv)
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: quarantine, backoff, re-admission
+# ---------------------------------------------------------------------------
+
+def test_quarantine_evicts_within_policy_window():
+    cfg, params = _params("dense")
+    rcfg = ReplicatedConfig(n_replicas=3, byz=(2,),
+                            attack=LogitAttackConfig(name="sign_flip"),
+                            quarantine_after=3)
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(), rcfg)
+    assert rep.first_quarantine_step == 3
+    byz = rep.replicas[2]
+    assert byz["quarantined"] or byz["evictions"] >= 1
+    assert byz["mean_score"] < rcfg.zeno_threshold
+    assert rep.quarantine_events[0]["replica"] == 2
+    # honest replicas never tripped the gate
+    assert rep.replicas[0]["evictions"] == 0
+    assert rep.replicas[1]["evictions"] == 0
+
+
+def test_readmission_with_backoff_keeps_stream_honest():
+    """Short backoff: the Byzantine replica is evicted, re-admitted (with a
+    KV cache kept coherent by decoding the voted tokens while quarantined),
+    diverges again and is re-evicted with a doubled backoff — while the
+    voted stream never leaves the honest trajectory."""
+    cfg, params = _params("dense")
+    reqs = synth_workload(8, V, seed=1, prompt_lens=(4, 10), gen_lens=(6, 8),
+                          rate=0.0)
+    scfg = _scfg(n_slots=2)
+    honest = _run(ServeEngine, cfg, params, scfg, reqs=reqs).outputs
+    rcfg = ReplicatedConfig(n_replicas=3, byz=(2,),
+                            attack=LogitAttackConfig(name="sign_flip"),
+                            quarantine_after=2, readmit_after=2,
+                            backoff_factor=2.0)
+    rep = _run(ReplicatedServeEngine, cfg, params, scfg, rcfg, reqs=reqs)
+    assert rep.outputs == honest
+    byz = rep.replicas[2]
+    assert byz["evictions"] >= 2
+    assert byz["quarantined_tokens"] > 0
+    backoffs = [e["backoff"] for e in rep.quarantine_events]
+    assert backoffs[0] == 2 and backoffs[1] == 4
+
+
+def test_all_faulty_fleet_falls_back_to_base_masses():
+    """Every replica dead -> the availability mask would zero all vote mass;
+    the engine falls back to the base staleness masses instead of voting
+    with nothing (degraded but deterministic)."""
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=2, dead=(0, 1), dead_after=0))
+    assert rep.outputs == _honest("dense")
+
+
+# ---------------------------------------------------------------------------
+# config validation + report plumbing
+# ---------------------------------------------------------------------------
+
+def test_replicated_config_validation():
+    with pytest.raises(ValueError, match="n_replicas"):
+        ReplicatedConfig(n_replicas=0).validate()
+    with pytest.raises(ValueError, match="unknown logit attack"):
+        ReplicatedConfig(attack=LogitAttackConfig(name="nope")).validate()
+    with pytest.raises(ValueError, match="out of range"):
+        ReplicatedConfig(n_replicas=2, byz=(5,)).validate()
+    with pytest.raises(ValueError, match="lags"):
+        ReplicatedConfig(n_replicas=3, lags=(1,)).validate()
+    cfg, params = _params("dense")
+    with pytest.raises(ValueError, match="replica params"):
+        ReplicatedServeEngine(cfg, [params], _scfg(),
+                              ReplicatedConfig(n_replicas=2))
+
+
+def test_report_carries_replica_health():
+    cfg, params = _params("dense")
+    rep = _run(ReplicatedServeEngine, cfg, params, _scfg(),
+               ReplicatedConfig(n_replicas=2))
+    d = rep.as_dict()
+    assert d["n_replicas"] == 2 and d["vote"] == "cwmed"
+    assert len(d["replicas"]) == 2
+    assert {h["role"] for h in d["replicas"]} == {"honest"}
+    assert all(h["mean_score"] > 0.99 for h in d["replicas"])
+
+
+# ---------------------------------------------------------------------------
+# units: staleness weights + logit-layout vote
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights():
+    w = np.asarray(staleness_weights([0, 0, 3]))
+    np.testing.assert_allclose(w, [4.0, 4.0, 1.0])
+    # fresh fleet -> uniform unit masses
+    np.testing.assert_allclose(np.asarray(staleness_weights([0, 0])), [1, 1])
+    # explicit reference version + floor for over-stale replicas
+    w = np.asarray(staleness_weights([0, 10], latest_version=5.0))
+    np.testing.assert_allclose(w, [5.0, 1e-3])
+
+
+@pytest.mark.parametrize("spec", ["cwmed", "ctma:cwtm", "gm"])
+def test_resolve_logits_is_vmapped_flat_rule(spec):
+    R, S, Vv = 4, 3, 8
+    lg = jax.random.normal(jax.random.PRNGKey(0), (R, S, Vv))
+    s = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    vote = resolve_logits(spec, lam=0.25)
+    got = np.asarray(vote(lg, s))
+    flat = resolve(spec, lam=0.25)
+    want = np.stack([np.asarray(flat(lg[:, j], s)) for j in range(S)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    assert got.shape == (S, Vv)

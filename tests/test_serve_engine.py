@@ -326,6 +326,62 @@ def test_engine_rejects_oversized_requests():
                            max_new_tokens=10))
 
 
+def test_submit_rejects_degenerate_requests():
+    """Degenerate requests fail AT SUBMIT, with the uid in the message —
+    never later inside a prefill plan mid-serve."""
+    cfg, params = _params("dense")
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN, buckets=(8, 16)))
+    ok = Request(uid=1, tokens=np.zeros(4, np.int32), max_new_tokens=2)
+    eng.submit(ok)                                    # sanity: valid passes
+    with pytest.raises(ValueError, match="uid.*max_new_tokens|max_new_tokens"):
+        eng.submit(Request(uid=7, tokens=np.zeros(4, np.int32),
+                           max_new_tokens=0))
+    with pytest.raises(ValueError, match="request 8.*largest prefill bucket"):
+        eng.submit(Request(uid=8, tokens=np.zeros(17, np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(ValueError, match="request 9.*empty prompt"):
+        eng.submit(Request(uid=9, tokens=np.zeros(0, np.int32),
+                           max_new_tokens=2))
+    with pytest.raises(ValueError, match="request 10.*1-D"):
+        eng.submit(Request(uid=10, tokens=np.zeros((2, 3), np.int32),
+                           max_new_tokens=2))
+    # nothing degenerate leaked into the queue
+    assert eng.sched.n_waiting == 1
+    # run()'s fail-fast pre-check uses the same validation
+    with pytest.raises(ValueError, match="request 11"):
+        eng.run([Request(uid=11, tokens=np.zeros(4, np.int32),
+                         max_new_tokens=-3)], warmup=False)
+
+
+def test_synth_workload_fully_seed_deterministic():
+    """Same seed = same requests, independently per draw category: turning
+    on arrivals or patches must not shift the prompt/gen streams."""
+    a = synth_workload(6, V, seed=5, rate=0.0)
+    b = synth_workload(6, V, seed=5, rate=0.0)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.tokens, rb.tokens)
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert ra.arrival == rb.arrival
+    # arrivals ride a separate stream: rate>0 changes ONLY the arrival times
+    c = synth_workload(6, V, seed=5, rate=100.0)
+    for ra, rc in zip(a, c):
+        np.testing.assert_array_equal(ra.tokens, rc.tokens)
+        assert ra.max_new_tokens == rc.max_new_tokens
+        assert rc.arrival > 0.0
+    # patches ride a separate stream too: prompts/gens/arrivals unchanged
+    d = synth_workload(6, V, seed=5, rate=100.0, n_patches=2, d_model=4)
+    for rc, rd in zip(c, d):
+        np.testing.assert_array_equal(rc.tokens, rd.tokens)
+        assert rc.max_new_tokens == rd.max_new_tokens
+        assert rc.arrival == rd.arrival
+        assert rd.patches.shape == (2, 4)
+    # and a different seed actually moves the draws
+    e = synth_workload(6, V, seed=6, rate=0.0)
+    assert any(not np.array_equal(ra.tokens, re.tokens)
+               for ra, re in zip(a, e))
+
+
 def test_report_timing_split():
     """compile/prefill/decode are reported separately and all non-trivial."""
     cfg, params = _params("dense")
