@@ -1,0 +1,50 @@
+"""The adversarial robustness matrix (``robust_*`` rows → BENCH_robust.json).
+
+Runs the `repro.fleet` scenario grid — attack × aggregator spec × arrival
+distribution × data heterogeneity — through the batched vmapped engine and
+the breakdown-point bisection. Every cell reports its final loss against the
+honest envelope, the smallest Byzantine mass that breaks it, and the resolved
+aggregator's standalone µs/call.
+
+The default grid is 4 attacks (sign_flip / little / empire + the
+adaptive_scale attacker that tunes against the resolved rule) × 3 aggregator
+specs (ω-CTMA over CWMed and GM, plus bare weighted CWMed) × 2 arrival
+distributions × 2 heterogeneity levels (IID and Dirichlet α=0.3 label skew)
+= 48 cells on the paper's MLP classifier. ``--smoke`` swaps in the quadratic
+family at short horizons — same 48-cell grid, CI-sized.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.fleet import breakdown_matrix, matrix_rows, matrix_scenarios
+
+GRID = dict(
+    attacks=("sign_flip", "little", "empire", "adaptive_scale"),
+    aggs=("ctma:cwmed", "ctma:gm", "cwmed"),
+    arrivals=("proportional", "squared"),
+    alphas=(math.inf, 0.3),
+    m=9, byz_frac=2.0 / 9.0, seeds=(0,),
+    # coarser search keeps the adaptive attacker ~2x cheaper per step with
+    # near-identical damage (the scale landscape is smooth in z)
+    adaptive_params=(("gs_iters", 3), ("n_grid", 5)),
+)
+
+
+def run(full: bool = False, smoke: bool = False):
+    if smoke:
+        scenarios = matrix_scenarios(problem="quadratic", steps=60, batch=4,
+                                     **GRID)
+        bisect_steps = 30
+    elif full:
+        scenarios = matrix_scenarios(problem="classifier", steps=300, **GRID)
+        bisect_steps = 100
+    else:
+        scenarios = matrix_scenarios(problem="classifier", steps=100, **GRID)
+        bisect_steps = 40
+    rows = breakdown_matrix(scenarios, bisect_steps=bisect_steps)
+    return matrix_rows(rows)
+
+
+if __name__ == "__main__":
+    print("\n".join(run(smoke=True)))

@@ -1,33 +1,39 @@
 """Paper Figure 2 / Figure 5: weighted vs non-weighted robust aggregators in
 an imbalanced asynchronous Byzantine environment (arrivals ∝ id², so honest
 fast workers dominate the update count; non-weighted rules treat them equally
-with slow/Byzantine ones and lose accuracy)."""
+with slow/Byzantine ones and lose accuracy).
+
+Runs on the `repro.fleet` batched engine: the weighted flag is a TRACED
+argument of the vmapped step, so each (attack, aggregator) pair's
+weighted/unweighted ablation runs as one two-scenario compile group.
+"""
 from __future__ import annotations
 
-from .common import fmt_row, run_async_experiment
+from repro.fleet import Scenario, run_scenarios
+
+from .common import fmt_row
 
 # 17 workers / 8 Byzantine (paper Fig. 2), arrivals ∝ id². The Byzantine
 # workers are the SLOW half: their *update mass* is tiny (λ_emp ≈ 0.11) but
 # they are 8/17 ≈ 47% of the workers — unweighted rules treat their stale
 # poisoned buffers as half the votes, weighted rules suppress them by s_i.
-SETUP = dict(m=17, byz=(0, 1, 2, 3, 4, 5, 6, 7), arrival="squared", steps=500)
+SETUP = dict(problem="classifier", m=17, byz_ids=tuple(range(8)),
+             arrival="squared", steps=500)
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     rows = []
+    setup = dict(SETUP, steps=200) if smoke else SETUP
     for attack, lam in (("label_flip", 0.3), ("sign_flip", 0.4)):
         for agg, label in (("cwmed", "CWMed"), ("gm", "RFA/GM")):
-            accs = {}
-            for weighted in (True, False):
-                r = run_async_experiment(attack=attack, agg=agg, lam=lam,
-                                         weighted=weighted, **SETUP)
-                accs[weighted] = r
-            name = f"fig2_{attack}_{label}"
-            rows.append(fmt_row(name, accs[True]["us_per_step"],
-                                f"acc_weighted={accs[True]['acc']:.3f};"
-                                f"acc_unweighted={accs[False]['acc']:.3f}"))
+            pair = [Scenario(attack=attack, agg=agg, lam=lam,
+                             weighted=w, **setup) for w in (True, False)]
+            wt, unwt = run_scenarios(pair)
+            rows.append(fmt_row(f"fig2_{attack}_{label}", wt.us_per_step,
+                                f"acc_weighted={wt.eval['acc']:.3f};"
+                                f"acc_unweighted={unwt.eval['acc']:.3f}"))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(run(smoke=True)))

@@ -22,14 +22,21 @@ experimental panels:
     robustserve_* Byzantine-tolerant replicated decode: honest-baseline
                 tok/s + replication overhead, per-attack token accuracy vs
                 the honest stream, quarantine latency (value = metric)
+    robust_*    repro.fleet adversarial robustness matrix — one row per
+                attack × aggregator × arrival × heterogeneity cell; value =
+                standalone aggregator µs/call, derived packs final loss vs
+                the honest envelope + breakdown fraction (bisection over
+                Byzantine mass on one compiled vmapped step)
 
 Aggregation rows additionally persist to ``BENCH_agg.json`` at the repo root
 so successive PRs accumulate a perf trajectory (``--smoke`` runs the reduced
 aggcost + agghier grids only — the CI fast path — and still records the
 fused-CTMA speedup at the acceptance shape m=17, d=100k). Serve rows persist
 the same way to ``BENCH_serve.json`` (``--only serve --smoke`` is the CI
-serve step) and replicated-serving rows to ``BENCH_robust_serve.json``
-(``--only robust-serve --smoke`` is the CI robustness step).
+serve step), replicated-serving rows to ``BENCH_robust_serve.json``
+(``--only robust-serve --smoke`` is the CI serving-robustness step), and
+training-side robustness-matrix rows to ``BENCH_robust.json``
+(``--only robust --smoke`` is the CI training-robustness step).
 """
 from __future__ import annotations
 
@@ -51,12 +58,14 @@ BENCHES = {
     "roofline": "benchmarks.bench_roofline",
     "serve": "benchmarks.bench_serve",
     "robust-serve": "benchmarks.bench_robust_serve",
+    "robust": "benchmarks.bench_robust",
 }
 
 BENCH_AGG_PATH = Path(__file__).resolve().parents[1] / "BENCH_agg.json"
 BENCH_SERVE_PATH = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 BENCH_ROBUST_SERVE_PATH = (Path(__file__).resolve().parents[1]
                            / "BENCH_robust_serve.json")
+BENCH_ROBUST_PATH = Path(__file__).resolve().parents[1] / "BENCH_robust.json"
 
 
 def _parse_row(row: str) -> dict:
@@ -98,6 +107,13 @@ def persist_robust_serve(rows: list[str]) -> None:
     _persist(BENCH_ROBUST_SERVE_PATH, ("robustserve_",), rows, "robust-serve")
 
 
+def persist_robust(rows: list[str]) -> None:
+    """Append this run's robustness-matrix rows to BENCH_robust.json — one
+    cell per row: aggregator µs/call in the value column; final loss, honest
+    envelope, breakdown fraction and engine step cost in ``derived``."""
+    _persist(BENCH_ROBUST_PATH, ("robust_",), rows, "robust")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -135,6 +151,7 @@ def main() -> None:
     persist_agg(all_rows)
     persist_serve(all_rows)
     persist_robust_serve(all_rows)
+    persist_robust(all_rows)
     if failures:
         raise SystemExit(1)
 

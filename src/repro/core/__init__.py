@@ -15,11 +15,17 @@ from .aggregators import (  # noqa: F401
 )
 from .attacks import (ATTACKS, LOGIT_ATTACKS, AttackConfig,  # noqa: F401
                       LogitAttackConfig, byzantine_vector, corrupt_logits,
-                      flip_labels)
+                      flip_labels, weighted_honest_stats)
 from .engine import (  # noqa: F401
     AsyncByzantineEngine,
     EngineConfig,
     EngineState,
     arrival_probs,
+    byz_mask_array,
+    engine_init,
+    engine_step,
     expected_lambda,
+    make_step_fn,
+    stack_engine_states,
+    unstack_engine_state,
 )

@@ -81,6 +81,30 @@ def _little_zmax(honest_weight: Array, byz_weight: Array) -> Array:
     return ndtri(phi)
 
 
+def weighted_honest_stats(honest_d: Pytree, honest_mask: Array,
+                          weights: Array) -> tuple[Pytree, Pytree]:
+    """Weighted coordinate-wise (mean, std) over the HONEST workers' buffers —
+    the statistics every omniscient attack (static little/empire here, the
+    adaptive attackers in ``repro.fleet.adaptive``) builds its vector from.
+    Layout-polymorphic: ``honest_d`` is a flat ``(m, d)`` matrix or a stacked
+    pytree with ``(m, ...)`` leaves."""
+    hw = (weights * honest_mask.astype(jnp.float32) + 1e-30).astype(jnp.float32)
+    hw_sum = jnp.sum(hw)
+
+    def leaf_mean(l):
+        return jnp.einsum("m,m...->...", hw, l.astype(jnp.float32)) / hw_sum
+
+    mu = _tmap(leaf_mean, honest_d)
+
+    def leaf_std(l, m_):
+        var = jnp.einsum("m,m...->...", hw,
+                         jnp.square(l.astype(jnp.float32) - m_)) / hw_sum
+        return jnp.sqrt(jnp.maximum(var, 0.0))
+
+    sd = _tmap(leaf_std, honest_d, mu)
+    return mu, sd
+
+
 def byzantine_vector(
     cfg: AttackConfig,
     honest_d: Pytree,         # (m, d) matrix OR stacked pytree: all buffers
@@ -97,22 +121,10 @@ def byzantine_vector(
     if name == "sign_flip":
         return _tmap(jnp.negative, own_update)
 
-    hw = (weights * honest_mask.astype(jnp.float32) + 1e-30).astype(jnp.float32)
-    hw_sum = jnp.sum(hw)
-
-    def leaf_mean(l):
-        return jnp.einsum("m,m...->...", hw, l.astype(jnp.float32)) / hw_sum
-
-    mu = _tmap(leaf_mean, honest_d)
+    mu, sd = weighted_honest_stats(honest_d, honest_mask, weights)
     if name == "empire":
         return _tmap(lambda m_: -cfg.epsilon * m_, mu)
     if name == "little":
-        def leaf_std(l, m_):
-            var = jnp.einsum("m,m...->...", hw,
-                             jnp.square(l.astype(jnp.float32) - m_)) / hw_sum
-            return jnp.sqrt(jnp.maximum(var, 0.0))
-
-        sd = _tmap(leaf_std, honest_d, mu)
         if cfg.z_max is not None:
             z = jnp.asarray(cfg.z_max, jnp.float32)
         else:

@@ -25,10 +25,20 @@ The whole server iteration is a single jitted step. Byzantine behaviors follow
 Appendix D: label flipping poisons the worker's labels before the gradient;
 sign flipping negates the transmission; little/empire are omniscient and read
 the honest workers' buffers with their weights.
+
+VMAPPABLE CORE: the step body lives in the module-level :func:`engine_step`
+(built via :func:`make_step_fn`), a pure function of
+``(state, batch, probs, byz_mask)`` — everything that varies *per scenario*
+without changing the trace (arrival probabilities, which workers are
+Byzantine, aggregation-weight masking) is a traced argument, so
+``repro.fleet`` vmaps ONE compiled step over a leading scenario axis of
+:func:`stack_engine_states`-stacked states. :class:`AsyncByzantineEngine` is
+the sequential (single-scenario) driver over the same body.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +81,34 @@ class EngineConfig(NamedTuple):
     #   jnp    — force the pure-jnp aggregators
     agg_backend: str = "auto"
 
+    def validate(self) -> "EngineConfig":
+        """Reject degenerate worker/Byzantine configurations at construction
+        time instead of letting them silently index-wrap inside the jitted
+        step (negative ids), double-count one worker's buffer in the Byzantine
+        mass (duplicate ids), or run a fleet with no honest worker at all
+        (byz covering every id) — each of those trained to garbage without an
+        error before this check."""
+        if self.m < 1:
+            raise ValueError(f"EngineConfig.m must be >= 1, got {self.m}")
+        ids = [int(i) for i in self.byz]
+        bad = [i for i in ids if not 0 <= i < self.m]
+        if bad:
+            raise ValueError(
+                f"EngineConfig.byz ids {bad} out of range(m={self.m}) — "
+                f"negative or >= m ids would index-wrap into other workers' "
+                f"buffers")
+        if len(set(ids)) != len(ids):
+            dupes = sorted({i for i in ids if ids.count(i) > 1})
+            raise ValueError(
+                f"EngineConfig.byz contains duplicate ids {dupes} — each "
+                f"worker is Byzantine at most once")
+        if len(ids) >= self.m:
+            raise ValueError(
+                f"EngineConfig.byz covers all {self.m} workers — at least "
+                f"one honest worker is required (the omniscient attacks and "
+                f"the robust-aggregation guarantees are undefined otherwise)")
+        return self
+
 
 class EngineState(NamedTuple):
     w: Pytree
@@ -102,6 +140,202 @@ def expected_lambda(cfg: EngineConfig) -> float:
     return float(sum(p[i] for i in cfg.byz))
 
 
+def byz_mask_array(m: int, byz: Sequence[int]) -> np.ndarray:
+    """(m,) bool mask — True on Byzantine ids."""
+    mask = np.zeros((m,), bool)
+    for i in byz:
+        mask[i] = True
+    return mask
+
+
+def stack_engine_states(states: Sequence[EngineState]) -> EngineState:
+    """Stack per-scenario states along a NEW leading scenario axis — the
+    layout ``repro.fleet`` vmaps :func:`engine_step` over."""
+    return _tmap(lambda *ls: jnp.stack(ls), *states)
+
+
+def unstack_engine_state(state: EngineState, i: int) -> EngineState:
+    """Slice scenario ``i``'s row back out of a stacked fleet state."""
+    return _tmap(lambda l: l[i], state)
+
+
+def engine_init(cfg: EngineConfig, grad_fn: Callable, params: Pytree,
+                init_batches: Any, byz_mask: Array) -> EngineState:
+    """Alg. 2 line 2 as a pure function: every worker computes d_1 at x_1 on
+    its own sample. ``byz_mask`` is explicit so fleet scenarios that share one
+    compiled step can differ in WHICH workers are Byzantine."""
+    x1 = _tmap(jnp.asarray, params)
+    byz_mask = jnp.asarray(byz_mask)
+
+    def one(i, batch):
+        lk = "y" if "y" in batch else "labels"
+        y = batch[lk]
+        y = jnp.where(byz_mask[i] & (cfg.attack.name == "label_flip")
+                      & (cfg.byz_start_step <= 0),
+                      flip_labels(y, cfg.n_classes), y)
+        return grad_fn(x1, {**batch, lk: y})
+
+    D = jax.vmap(one, in_axes=(0, 0))(jnp.arange(cfg.m), init_batches)
+    if cfg.attack.name == "sign_flip" and cfg.byz_start_step <= 0:
+        def flip(l):
+            byz = byz_mask.reshape((cfg.m,) + (1,) * (l.ndim - 1))
+            return jnp.where(byz, -l, l)
+
+        D = _tmap(flip, D)
+    S = jnp.zeros((cfg.m,), jnp.float32)
+    Xq = _tmap(lambda l: jnp.broadcast_to(l, (cfg.m,) + l.shape).copy(), x1)
+    return EngineState(
+        w=_tmap(lambda l: l.copy(), x1), x=_tmap(lambda l: l.copy(), x1),
+        D=D, S=S, Xq=Xq,
+        t=jnp.zeros((), jnp.int32), t_byz=jnp.zeros((), jnp.int32),
+        key=jax.random.PRNGKey(cfg.seed),
+    )
+
+
+def engine_step(cfg: EngineConfig, value_grad_fn: Callable, grad_fn: Callable,
+                agg_fn: Callable, attack_fn: Callable,
+                state: EngineState, batch: Any, probs: Array, byz_mask: Array,
+                *, anchor: Optional[Pytree] = None,
+                weighted: Optional[Array] = None,
+                per_worker_batch: bool = False) -> tuple[EngineState, dict]:
+    """ONE server iteration (Alg. 2 lines 4-10) as a pure, vmappable function.
+
+    Traced per-scenario arguments (vmap these over a leading scenario axis):
+      state      the :class:`EngineState` pytree (stacked for fleets).
+      batch      the arriving sample; with ``per_worker_batch`` the leaves
+                 carry a leading worker axis ``(m, ...)`` and the step selects
+                 the arriving worker's row — the data-heterogeneity path.
+      probs      (m,) arrival probabilities (ignored under round_robin).
+      byz_mask   (m,) bool — True on Byzantine workers.
+      weighted   optional () bool — False replaces the aggregation weights
+                 with ones (the non-weighted-rule ablation) WITHOUT leaving
+                 the compile group; None (static) keeps the weighted rule.
+
+    Static (compile-signature) arguments: ``cfg`` (attack name, arrival kind,
+    optimizer, spec string), the grad/aggregate/attack callables, ``anchor``
+    presence and ``per_worker_batch``. ``attack_fn(D, honest_mask, weights,
+    own_update)`` defaults to :func:`repro.core.attacks.byzantine_vector`;
+    ``repro.fleet.adaptive`` substitutes attackers that tune against
+    ``agg_fn`` here."""
+    opt = cfg.opt
+    key, k_arrival = jax.random.split(state.key)
+
+    t_next = state.t + 1
+    if cfg.arrival == "round_robin":
+        i = (state.t % cfg.m).astype(jnp.int32)
+    else:
+        i = jax.random.categorical(k_arrival, jnp.log(probs))
+
+    is_byz = byz_mask[i] & (t_next > cfg.byz_start_step)
+
+    # --- worker computation (lines 8-10) -------------------------------
+    if per_worker_batch:
+        batch = _tmap(lambda l: l[i], batch)
+    label_key = "y" if "y" in batch else "labels"
+    y = batch[label_key]
+    y_used = jnp.where(is_byz & (cfg.attack.name == "label_flip"),
+                       flip_labels(y, cfg.n_classes), y)
+    batch_used = {**batch, label_key: y_used}
+
+    query = state.x if opt.name == "mu2" else state.w
+    loss, g = value_grad_fn(query, batch_used)
+
+    s_new = state.S[i] + 1.0
+    d_prev = _row(state.D, i)
+    if opt.name == "mu2":
+        g_tilde = grad_fn(_row(state.Xq, i), batch_used)  # same sample z_t
+        beta = (jnp.asarray(opt.beta, jnp.float32) if opt.beta is not None
+                else 1.0 / jnp.maximum(s_new, 1.0))
+        d_honest = _tmap(
+            lambda gl, dl, gtl: jnp.where(s_new <= 1.0, gl,
+                                          gl + (1.0 - beta) * (dl - gtl)),
+            g, d_prev, g_tilde)
+    elif opt.name == "momentum":
+        beta = 0.9 if opt.beta is None else opt.beta
+        d_honest = _tmap(lambda dl, gl: beta * dl + (1.0 - beta) * gl,
+                         d_prev, g)
+    else:  # sgd
+        d_honest = g
+
+    # Omniscient attacks read the POST-update buffers: worker i's count is
+    # incremented and its honest momentum written before little/empire
+    # compute their weighted mean/std and z_max — matching the synchronous
+    # group step (dist/steps.py), which attacks counts_new/D_new. (The
+    # Byzantine row itself is masked out of the honest statistics, but the
+    # weight masses entering little's z_max must track update counts.)
+    S = state.S.at[i].set(s_new)
+    D_upd = _set_row(state.D, i, d_honest)
+    atk = attack_fn(D_upd, ~byz_mask, S, d_honest)
+    d_sent = _tmap(lambda a, h: jnp.where(is_byz, a, h), atk, d_honest)
+
+    D = _set_row(D_upd, i, d_sent)
+    Xq = _set_row(state.Xq, i, query)
+
+    # --- server update (lines 4-7) --------------------------------------
+    S_agg = S if weighted is None else jnp.where(weighted, S, jnp.ones_like(S))
+    d_hat = agg_fn(D, S_agg)
+    # α_t = t is the AnyTime importance weight — μ²-SGD only (with the
+    # constant-γ practical variant it folds into the learning rate).
+    alpha = (t_next.astype(jnp.float32)
+             if (opt.name == "mu2" and opt.gamma is None)
+             else jnp.asarray(1.0, jnp.float32))
+    w_new = _tmap(lambda wl, dl: wl - opt.lr * alpha * dl, state.w, d_hat)
+    if opt.proj_radius is not None:
+        # Π_K: project onto the ball of radius proj_radius around x_1
+        # (compact K) — GLOBAL norm across all leaves
+        diff = _tmap(jnp.subtract, w_new, anchor)
+        sq = sum(jnp.sum(jnp.square(l))
+                 for l in jax.tree_util.tree_leaves(diff))
+        scale = jnp.minimum(1.0, opt.proj_radius
+                            / jnp.maximum(jnp.sqrt(sq), 1e-30))
+        w_new = _tmap(lambda a, dl: a + scale * dl, anchor, diff)
+    if opt.name == "mu2":
+        gcoef = anytime_coeff(t_next + 1, opt.gamma)
+        x_new = _tmap(lambda xl, wl: xl + gcoef * (wl - xl), state.x, w_new)
+    else:
+        x_new = w_new
+
+    new_state = EngineState(
+        w=w_new, x=x_new, D=D, S=S, Xq=Xq,
+        t=t_next, t_byz=state.t_byz + is_byz.astype(jnp.int32), key=key,
+    )
+    metrics = {"loss": loss, "worker": i, "is_byz": is_byz,
+               "lambda_emp": new_state.t_byz / jnp.maximum(t_next, 1)}
+    return new_state, metrics
+
+
+def make_step_fn(cfg: EngineConfig, loss_fn: Callable, *,
+                 agg_fn: Optional[Callable] = None,
+                 attack_fn: Optional[Callable] = None,
+                 per_worker_batch: bool = False) -> Callable:
+    """Build ``step(state, batch, probs, byz_mask, weighted=None)`` — the
+    pure Alg. 2 iteration ``repro.fleet`` vmaps over scenario batches.
+
+    Scenarios sharing a compile signature (same cfg statics / spec / loss)
+    share ONE jit of the returned callable; proj_radius is unsupported here
+    (the anchor is per-run state — use the sequential engine)."""
+    if cfg.opt.proj_radius is not None:
+        raise ValueError("make_step_fn: proj_radius requires the per-run "
+                         "anchor — drive engine_step directly or use "
+                         "AsyncByzantineEngine")
+    cfg.validate()
+    if agg_fn is None:
+        from repro.agg import resolve
+        agg_fn = resolve(cfg.agg, lam=cfg.lam, backend=cfg.agg_backend)
+    if attack_fn is None:
+        attack_fn = partial(byzantine_vector, cfg.attack)
+    value_grad_fn = jax.value_and_grad(loss_fn)
+    grad_fn = jax.grad(loss_fn)
+
+    def step(state: EngineState, batch: Any, probs: Array, byz_mask: Array,
+             weighted: Optional[Array] = None):
+        return engine_step(cfg, value_grad_fn, grad_fn, agg_fn, attack_fn,
+                           state, batch, probs, byz_mask, weighted=weighted,
+                           per_worker_batch=per_worker_batch)
+
+    return step
+
+
 class AsyncByzantineEngine:
     """Runs Alg. 2 for an arbitrary model given a pytree loss function.
 
@@ -114,18 +348,19 @@ class AsyncByzantineEngine:
     """
 
     def __init__(self, cfg: EngineConfig, loss_fn: Callable[[Pytree, Any], Array],
-                 d_dim: Optional[int] = None):
-        self.cfg = cfg
+                 d_dim: Optional[int] = None,
+                 attack_fn: Optional[Callable] = None):
+        self.cfg = cfg.validate()
         self.loss_fn = loss_fn
         self.d_dim = d_dim
         self.grad_fn = jax.grad(loss_fn)
         self.value_grad_fn = jax.value_and_grad(loss_fn)
         self.agg_fn = self._make_agg_fn(cfg)
+        # Attack override seam: repro.fleet.adaptive installs attackers tuned
+        # against self.agg_fn; the default is the static Appendix D suite.
+        self.attack_fn = attack_fn or partial(byzantine_vector, cfg.attack)
         self.probs = jnp.asarray(arrival_probs(cfg))
-        byz_mask = np.zeros((cfg.m,), bool)
-        for i in cfg.byz:
-            byz_mask[i] = True
-        self.byz_mask = jnp.asarray(byz_mask)
+        self.byz_mask = jnp.asarray(byz_mask_array(cfg.m, cfg.byz))
         self._step = jax.jit(self._step_impl, donate_argnums=(0,))
 
     @staticmethod
@@ -143,121 +378,21 @@ class AsyncByzantineEngine:
         ``params`` is the model pytree (or a flat ``(d,)`` vector);
         ``init_batches`` has leading axis m (one minibatch per worker).
         """
-        cfg = self.cfg
         x1 = _tmap(jnp.asarray, params)
         # independent buffers: the step donates the state, so no aliasing allowed
         self._anchor = _tmap(lambda l: l.copy(), x1)  # compact-K projection center
-
-        def one(i, batch):
-            lk = "y" if "y" in batch else "labels"
-            y = batch[lk]
-            y = jnp.where(self.byz_mask[i] & (cfg.attack.name == "label_flip") & (cfg.byz_start_step <= 0),
-                          flip_labels(y, cfg.n_classes), y)
-            return self.grad_fn(x1, {**batch, lk: y})
-
-        D = jax.vmap(one, in_axes=(0, 0))(jnp.arange(cfg.m), init_batches)
-        if cfg.attack.name == "sign_flip" and cfg.byz_start_step <= 0:
-            mask = self.byz_mask
-
-            def flip(l):
-                byz = mask.reshape((cfg.m,) + (1,) * (l.ndim - 1))
-                return jnp.where(byz, -l, l)
-
-            D = _tmap(flip, D)
-        S = jnp.zeros((cfg.m,), jnp.float32)
-        Xq = _tmap(lambda l: jnp.broadcast_to(l, (cfg.m,) + l.shape).copy(), x1)
-        return EngineState(
-            w=_tmap(lambda l: l.copy(), x1), x=_tmap(lambda l: l.copy(), x1),
-            D=D, S=S, Xq=Xq,
-            t=jnp.zeros((), jnp.int32), t_byz=jnp.zeros((), jnp.int32),
-            key=jax.random.PRNGKey(cfg.seed),
-        )
+        return engine_init(self.cfg, self.grad_fn, x1, init_batches,
+                           self.byz_mask)
 
     # -- one server iteration ----------------------------------------------
     def _step_impl(self, state: EngineState, batch: Any) -> tuple[EngineState, dict]:
-        cfg = self.cfg
-        opt = cfg.opt
-        key, k_arrival = jax.random.split(state.key)
-
-        t_next = state.t + 1
-        if cfg.arrival == "round_robin":
-            i = (state.t % cfg.m).astype(jnp.int32)
-        else:
-            i = jax.random.categorical(k_arrival, jnp.log(self.probs))
-
-        is_byz = self.byz_mask[i] & (t_next > cfg.byz_start_step)
-
-        # --- worker computation (lines 8-10) -------------------------------
-        label_key = "y" if "y" in batch else "labels"
-        y = batch[label_key]
-        y_used = jnp.where(is_byz & (cfg.attack.name == "label_flip"),
-                           flip_labels(y, cfg.n_classes), y)
-        batch_used = {**batch, label_key: y_used}
-
-        query = state.x if opt.name == "mu2" else state.w
-        loss, g = self.value_grad_fn(query, batch_used)
-
-        s_new = state.S[i] + 1.0
-        d_prev = _row(state.D, i)
-        if opt.name == "mu2":
-            g_tilde = self.grad_fn(_row(state.Xq, i), batch_used)  # same sample z_t
-            beta = (jnp.asarray(opt.beta, jnp.float32) if opt.beta is not None
-                    else 1.0 / jnp.maximum(s_new, 1.0))
-            d_honest = _tmap(
-                lambda gl, dl, gtl: jnp.where(s_new <= 1.0, gl,
-                                              gl + (1.0 - beta) * (dl - gtl)),
-                g, d_prev, g_tilde)
-        elif opt.name == "momentum":
-            beta = 0.9 if opt.beta is None else opt.beta
-            d_honest = _tmap(lambda dl, gl: beta * dl + (1.0 - beta) * gl,
-                             d_prev, g)
-        else:  # sgd
-            d_honest = g
-
-        # Omniscient attacks read the POST-update buffers: worker i's count is
-        # incremented and its honest momentum written before little/empire
-        # compute their weighted mean/std and z_max — matching the synchronous
-        # group step (dist/steps.py), which attacks counts_new/D_new. (The
-        # Byzantine row itself is masked out of the honest statistics, but the
-        # weight masses entering little's z_max must track update counts.)
-        S = state.S.at[i].set(s_new)
-        D_upd = _set_row(state.D, i, d_honest)
-        atk = byzantine_vector(cfg.attack, D_upd, ~self.byz_mask, S, d_honest)
-        d_sent = _tmap(lambda a, h: jnp.where(is_byz, a, h), atk, d_honest)
-
-        D = _set_row(D_upd, i, d_sent)
-        Xq = _set_row(state.Xq, i, query)
-
-        # --- server update (lines 4-7) --------------------------------------
-        d_hat = self.agg_fn(D, S)
-        # α_t = t is the AnyTime importance weight — μ²-SGD only (with the
-        # constant-γ practical variant it folds into the learning rate).
-        alpha = (t_next.astype(jnp.float32)
-                 if (opt.name == "mu2" and opt.gamma is None)
-                 else jnp.asarray(1.0, jnp.float32))
-        w_new = _tmap(lambda wl, dl: wl - opt.lr * alpha * dl, state.w, d_hat)
-        if opt.proj_radius is not None:
-            # Π_K: project onto the ball of radius proj_radius around x_1
-            # (compact K) — GLOBAL norm across all leaves
-            diff = _tmap(jnp.subtract, w_new, self._anchor)
-            sq = sum(jnp.sum(jnp.square(l))
-                     for l in jax.tree_util.tree_leaves(diff))
-            scale = jnp.minimum(1.0, opt.proj_radius
-                                / jnp.maximum(jnp.sqrt(sq), 1e-30))
-            w_new = _tmap(lambda a, dl: a + scale * dl, self._anchor, diff)
-        if opt.name == "mu2":
-            gcoef = anytime_coeff(t_next + 1, opt.gamma)
-            x_new = _tmap(lambda xl, wl: xl + gcoef * (wl - xl), state.x, w_new)
-        else:
-            x_new = w_new
-
-        new_state = EngineState(
-            w=w_new, x=x_new, D=D, S=S, Xq=Xq,
-            t=t_next, t_byz=state.t_byz + is_byz.astype(jnp.int32), key=key,
-        )
-        metrics = {"loss": loss, "worker": i, "is_byz": is_byz,
-                   "lambda_emp": new_state.t_byz / jnp.maximum(t_next, 1)}
-        return new_state, metrics
+        # self.agg_fn / self.attack_fn are read at TRACE time, so callers may
+        # swap them (the non-weighted ablation, adaptive attackers) and re-jit.
+        anchor = (self._anchor if self.cfg.opt.proj_radius is not None
+                  else None)
+        return engine_step(self.cfg, self.value_grad_fn, self.grad_fn,
+                           self.agg_fn, self.attack_fn, state, batch,
+                           self.probs, self.byz_mask, anchor=anchor)
 
     def step(self, state: EngineState, batch: Any) -> tuple[EngineState, dict]:
         return self._step(state, batch)

@@ -1,6 +1,8 @@
 """Synthetic data: classification / LM / per-worker batch generators."""
 from .synthetic import (  # noqa: F401
     classification_batches,
+    dirichlet_class_probs,
+    heterogeneous_worker_batches,
     lm_batches,
     make_classification_data,
     worker_batches,

@@ -48,6 +48,59 @@ def worker_batches(m: int, batch_size: int, **kw) -> dict:
             "y": b["y"].reshape(m, batch_size)}
 
 
+def dirichlet_class_probs(m: int, n_classes: int, alpha: float,
+                          seed: int = 0) -> np.ndarray:
+    """Per-worker label distributions for the Fixing-by-Mixing heterogeneous
+    regime: worker i draws its labels from ``p_i ~ Dirichlet(alpha · 1_C)``.
+
+    Small ``alpha`` concentrates each worker on a few classes (strong label
+    skew); large ``alpha`` approaches uniform; ``alpha = inf`` returns the
+    exact IID uniform distribution. Returns an ``(m, n_classes)`` row-
+    stochastic matrix, deterministic in ``(m, n_classes, alpha, seed)``."""
+    if not np.isfinite(alpha):
+        return np.full((m, n_classes), 1.0 / n_classes, np.float64)
+    if alpha <= 0:
+        raise ValueError(f"Dirichlet alpha must be > 0 (or inf for IID), "
+                         f"got {alpha}")
+    rng = np.random.default_rng([seed, 0xD1F])
+    return rng.dirichlet(np.full(n_classes, float(alpha)), size=m)
+
+
+def heterogeneous_worker_batches(m: int, batch_size: int, *,
+                                 alpha: float = np.inf, image_hw=(28, 28),
+                                 channels=1, n_classes=10, seed=0, sigma=1.0,
+                                 sample_seed: Optional[int] = None,
+                                 shard_seed: Optional[int] = None
+                                 ) -> Iterator[dict]:
+    """Per-worker batch stacks under Dirichlet label skew.
+
+    Yields ``{"x": (m, B, H, W, C), "y": (m, B)}`` — one minibatch PER WORKER
+    per step, worker i's labels drawn from its own Dirichlet(alpha) class
+    distribution over the SAME class-mean patterns as
+    :func:`make_classification_data` (mean seed = ``seed``, so an IID test
+    split from ``make_classification_data`` evaluates every heterogeneity
+    level on one distribution). ``alpha = inf`` degenerates to IID workers.
+    ``sample_seed`` (defaults to ``seed``) seeds the sample stream and
+    ``shard_seed`` the per-worker Dirichlet draw, each as independent
+    substreams, so fleet scenarios can vary their data stream without moving
+    the class-mean patterns (and vice versa)."""
+    rng_mean = np.random.default_rng(seed)
+    rng = np.random.default_rng(
+        [seed if sample_seed is None else sample_seed, 0x5A17])
+    H, W = image_hw
+    means = rng_mean.normal(0.0, 1.0,
+                            size=(n_classes, H, W, channels)).astype(np.float32)
+    probs = dirichlet_class_probs(m, n_classes, alpha,
+                                  seed if shard_seed is None else shard_seed)
+    cum = np.cumsum(probs, axis=1)          # (m, C) inverse-CDF sampling
+    while True:
+        u = rng.random((m, batch_size))
+        y = (u[:, :, None] > cum[:, None, :]).sum(-1).astype(np.int32)
+        noise = rng.normal(size=(m, batch_size, H, W, channels))
+        x = means[y] + sigma * noise.astype(np.float32)
+        yield {"x": x.astype(np.float32), "y": y}
+
+
 def _lm_stream(rng: np.random.Generator, batch: int, seq: int, vocab: int,
                noise: float = 0.05) -> np.ndarray:
     """t_{i+1} = (a * t_i + b) mod V with occasional noise — learnable."""

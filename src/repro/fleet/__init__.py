@@ -1,0 +1,38 @@
+"""`repro.fleet` — vmapped adversarial scenario fleet for the training side.
+
+The robustness claims of the paper are only as strong as the scenario
+diversity they are checked against. This package evaluates the full matrix —
+attack × arrival distribution × aggregator spec × worker count × Byzantine
+fraction × data heterogeneity — cheaply, by vmapping ONE jitted Alg. 2 step
+(`core.engine.engine_step`) over a leading scenario axis of stacked engine
+states, so thousands of simulated workers advance per device step.
+
+    Scenario        declarative spec; `compile_signature` groups scenarios
+                    that can share one jit (scenario.py)
+    FleetGroup /    the batched engine: stacked-state init, one vmapped step,
+    run_scenarios   per-scenario snapshots + eval (batched.py)
+    adaptive        attackers that tune their vector against the RESOLVED
+                    aggregator inside jit (adaptive.py)
+    matrix          breakdown-point bisection + the robustness-vs-cost
+                    matrix persisted to BENCH_robust.json (matrix.py)
+
+See `src/repro/fleet/README.md` for the scenario grammar and matrix schema.
+"""
+from .scenario import (  # noqa: F401
+    PROBLEMS,
+    Scenario,
+    build_problem,
+    compile_signature,
+    engine_config,
+    group_scenarios,
+    resolved_byz_ids,
+)
+from .batched import FleetGroup, FleetResult, run_scenarios, run_sequential  # noqa: F401
+from .adaptive import ADAPTIVE_ATTACKS, FLEET_ATTACKS, make_attack_fn  # noqa: F401
+from .matrix import (  # noqa: F401
+    breakdown_matrix,
+    matrix_rows,
+    matrix_scenarios,
+    run_cached,
+    time_agg_us,
+)

@@ -1,0 +1,190 @@
+"""Adaptive Byzantine attackers — tuned against the RESOLVED aggregator.
+
+Static attacks (Appendix D) are the weak form of the threat model: ``little``
+picks its deviation ``z`` from worker masses alone and ``empire`` fixes its
+scale a priori, so a defense evaluated only against them can look far more
+robust than it is (the Zeno++ observation). The attackers here close that
+gap INSIDE the jitted step: they see the same momentum buffers and weights
+the omniscient static attacks see, plus the actual aggregation rule the
+server resolved, and optimize their transmitted vector against it.
+
+    adaptive_scale  golden-section + grid search over the little/empire
+                    scale ``z``: candidates ``μ - z·σ`` (little family) and
+                    ``-z·μ`` (empire family), scored by how far the
+                    AGGREGATED update is pushed against the honest descent
+                    direction; the best family's bracket is then refined by
+                    golden-section — all under vmap, no recompiles.
+    adaptive_grad   gradient-THROUGH-the-aggregator ascent: a few normalized
+                    gradient steps on the same damage objective, starting
+                    from the empire vector. Exact for smooth rules (ω-GM's
+                    Weiszfeld iterations); for sort-based rules (ω-CWMed) the
+                    a.e.-zero gradient makes it degrade toward its empire
+                    init — which is precisely the robustness story the matrix
+                    is meant to surface.
+
+Both reuse :func:`repro.core.attacks.weighted_honest_stats` (the same
+weighted coordinate-wise statistics the static omniscient attacks use) and
+plug into the engine's ``attack_fn`` seam with the
+``(D, honest_mask, weights, own_update)`` signature, so they run unchanged
+in the sequential engine and vmapped across a fleet scenario batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attacks import (ATTACKS, AttackConfig, byzantine_vector,
+                                weighted_honest_stats)
+
+Array = jnp.ndarray
+Pytree = Any
+
+_tmap = jax.tree_util.tree_map
+
+ADAPTIVE_ATTACKS = ("adaptive_scale", "adaptive_grad")
+#: Every attack name a fleet Scenario accepts.
+FLEET_ATTACKS = tuple(a for a in ATTACKS if a != "none") + ADAPTIVE_ATTACKS
+
+_GOLDEN = 0.6180339887498949  # (√5 − 1)/2
+
+
+def _vdot(a: Pytree, b: Pytree) -> Array:
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _norm(a: Pytree) -> Array:
+    return jnp.sqrt(jnp.maximum(_vdot(a, a), 1e-30))
+
+
+def _with_byz_rows(D: Pytree, honest_mask: Array, v: Pytree) -> Pytree:
+    """Every Byzantine row of the stacked buffers replaced by ``v``."""
+    def put(l, vl):
+        mask = honest_mask.reshape((-1,) + (1,) * (vl.ndim))
+        return jnp.where(mask, l, vl[None].astype(l.dtype))
+
+    return _tmap(put, D, v)
+
+
+def damage(agg_fn: Callable, D: Pytree, honest_mask: Array, weights: Array,
+           mu_hat: Pytree, v: Pytree) -> Array:
+    """The attacker's objective: how strongly the aggregate points AGAINST
+    the honest descent direction once every Byzantine row transmits ``v``.
+    The server applies ``w ← w − η·agg(D, s)``, honest progress is along the
+    weighted honest mean ``μ``, so maximizing ``−⟨agg(D_v, s), μ̂⟩`` turns
+    the server step from descent into ascent as hard as the rule allows."""
+    d_hat = agg_fn(_with_byz_rows(D, honest_mask, v), weights)
+    return -_vdot(d_hat, mu_hat)
+
+
+def _golden_refine(f: Callable[[Array], Array], lo: Array, hi: Array,
+                   iters: int) -> Array:
+    """Golden-section MAXIMIZATION of ``f`` on [lo, hi] with a static
+    iteration count — pure arithmetic, safe under jit + vmap."""
+    a, b = lo, hi
+    c = b - _GOLDEN * (b - a)
+    d = a + _GOLDEN * (b - a)
+    fc, fd = f(c), f(d)
+    for _ in range(iters):
+        left = fc > fd
+        a = jnp.where(left, a, c)
+        b = jnp.where(left, d, b)
+        c = b - _GOLDEN * (b - a)
+        d = a + _GOLDEN * (b - a)
+        fc, fd = f(c), f(d)
+    return 0.5 * (a + b)
+
+
+def adaptive_scale_attack(
+    agg_fn: Callable,
+    D: Pytree, honest_mask: Array, weights: Array, own_update: Pytree,
+    *, z_lo: float = 0.0, z_hi: float = 8.0, n_grid: int = 9,
+    gs_iters: int = 6,
+) -> Pytree:
+    """Grid + golden-section search over the little/empire scale ``z``.
+
+    Evaluates ``v_little(z) = μ − z·σ`` and ``v_empire(z) = −z·μ`` on an
+    ``n_grid``-point grid over ``[z_lo, z_hi]``, golden-section-refines each
+    family inside the bracket around its grid winner, and transmits the best
+    vector overall. Every candidate is scored through the REAL resolved
+    ``agg_fn`` — the attack automatically re-tunes when the defense changes.
+    """
+    mu, sd = weighted_honest_stats(D, honest_mask, weights)
+    mu_hat = _tmap(lambda l: l / _norm(mu), mu)
+
+    v_little = lambda z: _tmap(lambda m_, s_: m_ - z * s_, mu, sd)
+    v_empire = lambda z: _tmap(lambda m_: -z * m_, mu)
+    J = partial(damage, agg_fn, D, honest_mask, weights, mu_hat)
+
+    zs = jnp.linspace(z_lo, z_hi, n_grid)
+    half = 0.5 * (z_hi - z_lo) / (n_grid - 1)
+    best = []
+    for fam in (v_little, v_empire):
+        scores = jax.vmap(lambda z: J(fam(z)))(zs)
+        z0 = zs[jnp.argmax(scores)]
+        z_ref = _golden_refine(lambda z: J(fam(z)),
+                               jnp.maximum(z0 - half, z_lo),
+                               jnp.minimum(z0 + half, z_hi), gs_iters)
+        # keep the refinement only if it actually beat the grid winner
+        z_star = jnp.where(J(fam(z_ref)) >= jnp.max(scores), z_ref, z0)
+        best.append((fam(z_star), J(fam(z_star))))
+
+    (vl, jl), (ve, je) = best
+    return _tmap(lambda a, b: jnp.where(jl >= je, a, b), vl, ve)
+
+
+def adaptive_grad_attack(
+    agg_fn: Callable,
+    D: Pytree, honest_mask: Array, weights: Array, own_update: Pytree,
+    *, grad_steps: int = 6, step_frac: float = 0.5, clip_mult: float = 8.0,
+) -> Pytree:
+    """Gradient ascent on the damage objective THROUGH the aggregator.
+
+    Starts at the empire vector ``−μ`` and takes ``grad_steps`` normalized
+    ascent steps of size ``step_frac·‖μ‖`` on ``−⟨agg(D_v, s), μ̂⟩``,
+    differentiating straight through the resolved rule (Weiszfeld loops
+    included); the iterate is kept inside ``clip_mult·‖μ‖`` so unbounded
+    directions cannot hide behind the trim."""
+    mu, _ = weighted_honest_stats(D, honest_mask, weights)
+    mu_norm = _norm(mu)
+    mu_hat = _tmap(lambda l: l / mu_norm, mu)
+    J = partial(damage, agg_fn, D, honest_mask, weights, mu_hat)
+    grad_J = jax.grad(J)
+
+    v = _tmap(jnp.negative, mu)
+    for _ in range(grad_steps):
+        g = grad_J(v)
+        gn = _norm(g)
+        step = step_frac * mu_norm
+        v = _tmap(lambda vl, gl: vl + step * gl / gn, v, g)
+        vn = _norm(v)
+        scale = jnp.minimum(1.0, clip_mult * mu_norm / vn)
+        v = _tmap(lambda vl: scale * vl, v)
+    return v
+
+
+_ADAPTIVE_BUILDERS: Dict[str, Callable] = {
+    "adaptive_scale": adaptive_scale_attack,
+    "adaptive_grad": adaptive_grad_attack,
+}
+
+
+def make_attack_fn(name: str, agg_fn: Callable,
+                   params: Optional[dict] = None) -> Callable:
+    """Build the engine's ``attack_fn(D, honest_mask, weights, own_update)``
+    for any fleet attack name — the static Appendix D suite falls through to
+    :func:`byzantine_vector`, the adaptive names close over the resolved
+    ``agg_fn``. ``params`` carries the attack's static knobs (grid bounds,
+    ascent steps, epsilon, …)."""
+    params = dict(params or {})
+    if name in _ADAPTIVE_BUILDERS:
+        return partial(_ADAPTIVE_BUILDERS[name], agg_fn, **params)
+    if name not in ATTACKS:
+        raise KeyError(f"unknown fleet attack {name!r}; choose from "
+                       f"{FLEET_ATTACKS}")
+    akw = {k: v for k, v in params.items() if k in AttackConfig._fields}
+    return partial(byzantine_vector, AttackConfig(name, **akw))

@@ -1,0 +1,168 @@
+"""Batched scenario execution: ONE jitted, vmapped Alg. 2 step per group.
+
+A :class:`FleetGroup` takes scenarios sharing a compile signature, stacks
+their engine states along a leading scenario axis
+(`core.engine.stack_engine_states`), and drives them with a single
+``jit(vmap(engine_step))`` — per-scenario arrival probabilities, Byzantine
+masks and the weighted-rule ablation flag ride in as traced arguments, so a
+group of S scenarios with m workers each advances S·m simulated workers per
+device step and the breakdown bisection re-runs with new Byzantine masses
+without recompiling. :func:`run_sequential` drives the SAME pure step
+unvmapped — the parity reference the tests pin the batched trajectories
+against, step for step.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg import resolve
+from repro.core.engine import (EngineState, arrival_probs, byz_mask_array,
+                               engine_init, make_step_fn, stack_engine_states,
+                               unstack_engine_state)
+
+from .adaptive import make_attack_fn
+from .scenario import (Problem, Scenario, build_problem, compile_signature,
+                       engine_config, group_scenarios, resolved_byz_ids)
+
+_tmap = jax.tree_util.tree_map
+
+
+class FleetResult(NamedTuple):
+    """One scenario's outcome: the final engine state row, the problem's
+    held-out evaluation (``loss`` always; ``acc``/``excess`` per family),
+    the empirical Byzantine-update fraction, and the group-amortized step
+    cost."""
+    scenario: Scenario
+    state: EngineState
+    eval: dict
+    lambda_emp: float
+    us_per_step: float
+
+
+def _scenario_statics(sc: Scenario):
+    """(cfg, probs, mask, weighted) — the per-scenario traced arguments."""
+    cfg = engine_config(sc)
+    probs = jnp.asarray(arrival_probs(cfg))
+    mask = jnp.asarray(byz_mask_array(sc.m, resolved_byz_ids(sc)))
+    return cfg, probs, mask, jnp.asarray(sc.weighted)
+
+
+class FleetGroup:
+    """Runs one compile group of scenarios behind a single jitted vmapped
+    step. Build via :func:`run_scenarios` unless you need the group handle
+    itself (the breakdown bisection does — it re-runs a group with new
+    Byzantine masses on the already-compiled step)."""
+
+    def __init__(self, scenarios: List[Scenario],
+                 problem: Optional[Problem] = None):
+        if not scenarios:
+            raise ValueError("FleetGroup needs at least one scenario")
+        sigs = {compile_signature(sc) for sc in scenarios}
+        if len(sigs) > 1:
+            raise ValueError(
+                f"scenarios span {len(sigs)} compile signatures — group them "
+                f"with repro.fleet.group_scenarios first")
+        self.scenarios = list(scenarios)
+        rep = scenarios[0]
+        self.problem = problem or build_problem(rep)
+        self.agg_fn = resolve(rep.agg, lam=rep.lam, backend=rep.agg_backend)
+        self.attack_fn = make_attack_fn(rep.attack, self.agg_fn,
+                                        dict(rep.attack_params))
+        cfg = engine_config(rep)
+        self._grad_fn = jax.grad(self.problem.loss_fn)
+        step = make_step_fn(cfg, self.problem.loss_fn, agg_fn=self.agg_fn,
+                            attack_fn=self.attack_fn, per_worker_batch=True)
+        self._vstep = jax.jit(jax.vmap(step), donate_argnums=(0,))
+
+    def init(self, scs: List[Scenario]) -> tuple[EngineState, list]:
+        """Stacked initial state + one live data stream per scenario (the
+        first draw of each stream is consumed as the Alg. 2 line-2 init
+        minibatches, exactly like the sequential path)."""
+        streams = [self.problem.stream(sc) for sc in scs]
+        states = []
+        for sc, stream in zip(scs, streams):
+            cfg, _, mask, _ = _scenario_statics(sc)
+            states.append(engine_init(cfg, self._grad_fn,
+                                      self.problem.init_params(sc),
+                                      next(stream), mask))
+        return stack_engine_states(states), streams
+
+    def run(self, scenarios: Optional[List[Scenario]] = None,
+            evaluate: bool = True) -> List[FleetResult]:
+        """Drive every scenario to ITS OWN step count (the group runs to the
+        max and snapshots each scenario's row as it crosses its horizon).
+
+        ``scenarios`` overrides the group's list WITHOUT recompiling — the
+        replacements must share the group's compile signature (this is how
+        the breakdown bisection sweeps Byzantine mass on one compiled step).
+        """
+        scs = self.scenarios if scenarios is None else list(scenarios)
+        sig = compile_signature(self.scenarios[0])
+        bad = [sc.label for sc in scs if compile_signature(sc) != sig]
+        if bad:
+            raise ValueError(f"scenario(s) {bad} do not match this group's "
+                             f"compile signature")
+        state, streams = self.init(scs)
+        probs = jnp.stack([_scenario_statics(sc)[1] for sc in scs])
+        masks = jnp.stack([_scenario_statics(sc)[2] for sc in scs])
+        weighted = jnp.asarray([sc.weighted for sc in scs])
+        max_steps = max(sc.steps for sc in scs)
+
+        snapshots: Dict[int, EngineState] = {}
+        t0 = time.perf_counter()
+        for t in range(max_steps):
+            batch = _tmap(lambda *ls: jnp.stack(ls),
+                          *[next(s) for s in streams])
+            state, _ = self._vstep(state, batch, probs, masks, weighted)
+            for i, sc in enumerate(scs):
+                if sc.steps == t + 1:
+                    snapshots[i] = unstack_engine_state(state, i)
+        jax.block_until_ready(snapshots[max(snapshots)].x)
+        us = (time.perf_counter() - t0) / max_steps * 1e6
+
+        out = []
+        for i, sc in enumerate(scs):
+            row = snapshots[i]
+            ev = self.problem.evaluate(row.x, sc) if evaluate else {}
+            lam = float(row.t_byz) / max(float(row.t), 1.0)
+            out.append(FleetResult(sc, row, ev, lam, us))
+        return out
+
+
+def run_scenarios(scenarios: List[Scenario]) -> List[FleetResult]:
+    """THE fleet runner: group by compile signature, run each group behind
+    one jitted vmapped step, scatter results back to input order."""
+    results: List[Optional[FleetResult]] = [None] * len(scenarios)
+    for _, idxs in group_scenarios(scenarios).items():
+        for idx, res in zip(idxs, FleetGroup([scenarios[i]
+                                              for i in idxs]).run()):
+            results[idx] = res
+    return results  # type: ignore[return-value]
+
+
+def run_sequential(sc: Scenario, evaluate: bool = True) -> FleetResult:
+    """The unbatched reference: the SAME pure step, same data stream, same
+    RNG — jitted without the vmap. Exists so tests can pin batched-fleet
+    trajectories step-for-step against the sequential engine."""
+    problem = build_problem(sc)
+    cfg, probs, mask, weighted = _scenario_statics(sc)
+    agg_fn = resolve(sc.agg, lam=sc.lam, backend=sc.agg_backend)
+    attack_fn = make_attack_fn(sc.attack, agg_fn, dict(sc.attack_params))
+    step = jax.jit(make_step_fn(cfg, problem.loss_fn, agg_fn=agg_fn,
+                                attack_fn=attack_fn, per_worker_batch=True),
+                   donate_argnums=(0,))
+    stream = problem.stream(sc)
+    state = engine_init(cfg, jax.grad(problem.loss_fn),
+                        problem.init_params(sc), next(stream), mask)
+    t0 = time.perf_counter()
+    for _ in range(sc.steps):
+        state, _ = step(state, next(stream), probs, mask, weighted)
+    jax.block_until_ready(state.x)
+    us = (time.perf_counter() - t0) / max(sc.steps, 1) * 1e6
+    ev = problem.evaluate(state.x, sc) if evaluate else {}
+    lam = float(state.t_byz) / max(float(state.t), 1.0)
+    return FleetResult(sc, state, ev, lam, us)

@@ -1,0 +1,230 @@
+"""The robustness matrix: breakdown-point search + per-cell cost accounting.
+
+Each :class:`~repro.fleet.scenario.Scenario` is one cell. For every cell this
+module reports
+
+    final_loss / acc      the attacked run at the cell's own Byzantine mass
+    honest_loss / acc     the SAME scenario with zero Byzantine workers (runs
+                          inside the same compile group — the attack branch
+                          no-ops when the Byzantine mask is empty)
+    breakdown_count/frac  the smallest Byzantine worker count at which the
+                          cell's honest-loss envelope breaks, found by
+                          BISECTION over Byzantine mass — every probe reuses
+                          the group's already-compiled vmapped step because
+                          the Byzantine mask is a traced argument
+    agg_us_per_call       the resolved aggregator's standalone cost at the
+                          cell's (m, d) shape
+    engine_us_per_step    group-amortized wall clock of the full Alg. 2 step
+
+A cell is BROKEN when its eval loss exceeds ``honest_loss · factor + margin``
+or goes non-finite. The bisection invariant is [lo known-OK, hi known-broken]
+with ``hi = m`` as the virtual always-broken endpoint, so ``breakdown_count``
+is the first failing count and ``breakdown_frac = breakdown_count / m`` is
+``1.0`` exactly when the rule survived every feasible mass (≤ m − 1).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg import resolve
+
+from .batched import FleetGroup, FleetResult
+from .scenario import (Scenario, build_problem, compile_signature,
+                       group_scenarios, resolved_byz_ids)
+
+
+def run_cached(scenarios: List[Scenario],
+               cache: Dict[tuple, FleetGroup]) -> List[FleetResult]:
+    """`run_scenarios`, but FleetGroups persist in ``cache`` across calls —
+    repeated sweeps over a shape class (the bisection) never recompile."""
+    results: List[Optional[FleetResult]] = [None] * len(scenarios)
+    for sig, idxs in group_scenarios(scenarios).items():
+        grp = cache.get(sig)
+        if grp is None:
+            grp = cache[sig] = FleetGroup([scenarios[i] for i in idxs])
+        for idx, res in zip(idxs, grp.run([scenarios[i] for i in idxs])):
+            results[idx] = res
+    return results  # type: ignore[return-value]
+
+
+def time_agg_us(spec: str, lam: float, backend: str, m: int, d: int,
+                iters: int = 50) -> float:
+    """Standalone µs/call of a resolved aggregator at shape (m, d) — the
+    Table-1-style cost column of the matrix, measured outside the engine."""
+    agg_fn = resolve(spec, lam=lam, backend=backend)
+    X = jax.random.normal(jax.random.PRNGKey(0), (m, d), jnp.float32)
+    s = jnp.arange(1.0, m + 1.0, dtype=jnp.float32)
+    f = jax.jit(agg_fn)
+    jax.block_until_ready(f(X, s))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(X, s)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _is_broken(loss: float, honest_loss: float, factor: float,
+               margin: float) -> bool:
+    return (not math.isfinite(loss)) or loss > honest_loss * factor + margin
+
+
+def _honest_twin(sc: Scenario) -> Scenario:
+    """The cell's zero-Byzantine baseline. The attack is canonicalized to
+    ``sign_flip`` — with an empty Byzantine mask no buffer row is ever
+    replaced and no init batch poisoned, so honest dynamics are attack-
+    invariant and one baseline serves every attack of a configuration."""
+    return sc._replace(byz_ids=(), attack="sign_flip", attack_params=(),
+                       name="")
+
+
+def breakdown_matrix(scenarios: List[Scenario], *, factor: float = 1.5,
+                     margin: float = 0.25,
+                     bisect_steps: Optional[int] = None,
+                     time_aggs: bool = True,
+                     cache: Optional[Dict[tuple, FleetGroup]] = None
+                     ) -> List[dict]:
+    """Evaluate every cell and bisect its breakdown point; returns one flat
+    JSON-ready dict per input scenario (input order preserved).
+
+    ``bisect_steps`` shortens the bisection probes' horizon (the honest
+    envelope is re-measured at that horizon so the threshold stays
+    comparable); by default probes run the cell's full ``steps``. Passing a
+    ``cache`` shares compiled groups with the caller across matrix calls.
+    """
+    cache = {} if cache is None else cache
+    n = len(scenarios)
+
+    # main runs + deduped honest twins, one batched pass
+    batch = list(scenarios)
+    twin_ix: Dict[Scenario, int] = {}
+    for sc in scenarios:
+        twin = _honest_twin(sc)
+        if twin not in twin_ix:
+            twin_ix[twin] = len(batch)
+            batch.append(twin)
+    res = run_cached(batch, cache)
+    main = res[:n]
+    honest = {twin: res[j] for twin, j in twin_ix.items()}
+
+    # honest envelope at the bisection horizon (reuse full-horizon runs when
+    # the horizons coincide)
+    def _short(sc: Scenario) -> Scenario:
+        steps = sc.steps if bisect_steps is None else min(bisect_steps,
+                                                          sc.steps)
+        return sc._replace(steps=steps, name="")
+
+    short_twins = {sc: _honest_twin(_short(sc)) for sc in scenarios}
+    missing = [t for t in set(short_twins.values()) if t not in honest]
+    for t, r in zip(missing, run_cached(missing, cache)):
+        honest[t] = r
+
+    # bisection over Byzantine count, batched across cells per iteration
+    lo = [0] * n
+    hi = [sc.m for sc in scenarios]
+    for i, (sc, r) in enumerate(zip(scenarios, main)):
+        # seed with the cell's own full run when horizons match
+        if _short(sc).steps == sc.steps and 0 < len(
+                resolved_byz_ids(sc)) < sc.m:
+            h = honest[short_twins[sc]].eval["loss"]
+            b = len(resolved_byz_ids(sc))
+            if _is_broken(r.eval["loss"], h, factor, margin):
+                hi[i] = b
+            else:
+                lo[i] = b
+    while True:
+        probe_ix = [i for i in range(n) if hi[i] - lo[i] > 1]
+        if not probe_ix:
+            break
+        mids = {i: (lo[i] + hi[i]) // 2 for i in probe_ix}
+        probes = [_short(scenarios[i])._replace(
+            byz_ids=tuple(range(mids[i]))) for i in probe_ix]
+        for i, r in zip(probe_ix, run_cached(probes, cache)):
+            h = honest[short_twins[scenarios[i]]].eval["loss"]
+            if _is_broken(r.eval["loss"], h, factor, margin):
+                hi[i] = mids[i]
+            else:
+                lo[i] = mids[i]
+
+    # standalone aggregator timings, one per distinct (agg, lam, backend, m, d)
+    agg_us: Dict[tuple, float] = {}
+    if time_aggs:
+        for sc in scenarios:
+            d = build_problem(sc).d
+            key = (sc.agg, float(sc.lam), sc.agg_backend, sc.m, d)
+            if key not in agg_us:
+                agg_us[key] = time_agg_us(*key)
+
+    rows = []
+    for i, (sc, r) in enumerate(zip(scenarios, main)):
+        h = honest[_honest_twin(sc)]
+        d = build_problem(sc).d
+        row = {
+            "cell": sc.label,
+            "problem": sc.problem, "attack": sc.attack, "agg": sc.agg,
+            "arrival": sc.arrival,
+            "alpha": "inf" if not math.isfinite(sc.alpha) else sc.alpha,
+            "m": sc.m, "n_byz": len(resolved_byz_ids(sc)),
+            "byz_frac": len(resolved_byz_ids(sc)) / sc.m,
+            "seed": sc.seed, "steps": sc.steps, "weighted": sc.weighted,
+            "final_loss": float(r.eval["loss"]),
+            "honest_loss": float(h.eval["loss"]),
+            "lambda_emp": r.lambda_emp,
+            "engine_us_per_step": r.us_per_step,
+            "breakdown_count": hi[i],
+            "breakdown_frac": hi[i] / sc.m,
+            "agg_us_per_call": agg_us.get(
+                (sc.agg, float(sc.lam), sc.agg_backend, sc.m, d)),
+        }
+        if "acc" in r.eval:
+            row["acc"] = float(r.eval["acc"])
+            row["honest_acc"] = float(h.eval["acc"])
+        rows.append(row)
+    return rows
+
+
+def matrix_scenarios(*, problem: str = "classifier",
+                     attacks=("sign_flip", "little", "empire",
+                              "adaptive_scale"),
+                     aggs=("ctma:cwmed", "ctma:gm", "cwmed"),
+                     arrivals=("proportional", "squared"),
+                     alphas=(math.inf, 0.3),
+                     m: int = 9, byz_frac: float = 2.0 / 9.0,
+                     steps: int = 100, batch: int = 8, seeds=(0,),
+                     lam: float = 0.38,
+                     adaptive_params: tuple = ()) -> List[Scenario]:
+    """The full cross-product grid — one Scenario per (attack × agg ×
+    arrival × alpha × seed) cell. ``adaptive_params`` is attached to the
+    adaptive attacks only (grid size / golden-section iterations tradeoff)."""
+    from .adaptive import ADAPTIVE_ATTACKS
+    return [
+        Scenario(problem=problem, attack=at, agg=ag, lam=lam, m=m,
+                 byz_frac=byz_frac, arrival=ar, alpha=al, seed=sd,
+                 steps=steps, batch=batch,
+                 attack_params=(tuple(adaptive_params)
+                                if at in ADAPTIVE_ATTACKS else ()))
+        for at in attacks for ag in aggs for ar in arrivals
+        for al in alphas for sd in seeds
+    ]
+
+
+def matrix_rows(rows: List[dict]) -> List[str]:
+    """Benchmark-orchestrator CSV lines (``name,us_per_call,derived``) for a
+    matrix — the value column carries the standalone aggregator µs/call and
+    ``derived`` packs the robustness metrics, one ``robust_`` row per cell."""
+    out = []
+    for r in rows:
+        derived = (f"loss={r['final_loss']:.4f}"
+                   f";honest={r['honest_loss']:.4f}"
+                   f";breakdown_frac={r['breakdown_frac']:.3f}"
+                   f";lambda={r['lambda_emp']:.3f}"
+                   f";step_us={r['engine_us_per_step']:.0f}")
+        if "acc" in r:
+            derived += f";acc={r['acc']:.4f}"
+        us = r["agg_us_per_call"] or 0.0
+        out.append(f"robust_{r['cell']},{us:.1f},{derived}")
+    return out

@@ -1,0 +1,227 @@
+"""Declarative scenario specs + compile-signature grouping.
+
+A :class:`Scenario` names ONE cell of the robustness matrix: attack ×
+arrival/delay distribution × ``rule[:base][@backend]`` aggregator spec ×
+worker count ``m`` × Byzantine fraction × data-heterogeneity ``alpha`` ×
+seed, over a named problem family. Scenarios are grouped by
+:func:`compile_signature` — everything that changes the TRACE of the jitted
+Alg. 2 step (attack branch, aggregator, optimizer, arrival kind, shapes) is
+in the signature; everything that is merely DATA (which workers are
+Byzantine, arrival probabilities, heterogeneity level, seeds, weighted-rule
+ablation) is traced, so one jit serves every scenario of a shape class and
+the breakdown-point bisection sweeps Byzantine mass without a single
+recompile.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import MLP_SMALL
+from repro.core import AttackConfig, EngineConfig
+from repro.data.synthetic import (heterogeneous_worker_batches,
+                                  make_classification_data)
+from repro.models.classifier import (classifier_accuracy, classifier_loss,
+                                     init_classifier)
+from repro.optim import OptConfig
+from repro.utils import ravel_pytree_fn
+
+INF = float("inf")
+
+# Default μ²-SGD settings per problem family (the benches' historical values).
+_OPT_CLS = OptConfig(name="mu2", lr=0.05, gamma=0.1, beta=0.25)
+_OPT_QUAD = OptConfig(name="mu2", lr=0.02, gamma=0.1, beta=0.25)
+
+
+class Scenario(NamedTuple):
+    """One cell of the robustness matrix (all fields hashable).
+
+    ``attack`` takes any static name from ``core.attacks.ATTACKS`` or an
+    adaptive name from ``fleet.adaptive.ADAPTIVE_ATTACKS``;
+    ``attack_params`` carries static attack knobs (epsilon, grid bounds, …)
+    as a sorted kv-tuple. ``byz_frac`` resolves to the ``round(byz_frac·m)``
+    LOWEST worker ids (the slowest arrivals under proportional/squared
+    distributions — the paper's Fig. 2 regime) unless ``byz_ids`` pins them.
+    ``alpha`` is the Dirichlet label-skew concentration (``inf`` = IID;
+    quadratic scenarios read it as a per-worker mean-shift scale ``1/√alpha``).
+    ``weighted=False`` feeds unit weights to the aggregator — the
+    non-weighted-rule ablation — without leaving the compile group."""
+    problem: str = "classifier"          # classifier | quadratic
+    attack: str = "sign_flip"
+    agg: str = "ctma:cwmed"
+    lam: float = 0.38
+    m: int = 9
+    byz_frac: float = 2.0 / 9.0
+    byz_ids: Optional[Tuple[int, ...]] = None
+    arrival: str = "proportional"
+    alpha: float = INF                   # data heterogeneity (inf = IID)
+    seed: int = 0
+    steps: int = 300
+    batch: int = 8
+    opt: Optional[OptConfig] = None      # None -> per-problem default
+    weighted: bool = True
+    byz_start_step: int = 0
+    agg_backend: str = "jnp"
+    attack_params: Tuple[Tuple[str, Any], ...] = ()
+    name: str = ""
+
+    @property
+    def label(self) -> str:
+        if self.name:
+            return self.name
+        agg = self.agg.replace(":", "-").replace("@", "_")
+        alpha = "iid" if not math.isfinite(self.alpha) else f"a{self.alpha:g}"
+        return (f"{self.problem}_{self.attack}_{agg}_{self.arrival}_{alpha}"
+                f"_m{self.m}_b{len(resolved_byz_ids(self))}_s{self.seed}")
+
+    @property
+    def opt_resolved(self) -> OptConfig:
+        if self.opt is not None:
+            return self.opt
+        return _OPT_CLS if self.problem == "classifier" else _OPT_QUAD
+
+
+def resolved_byz_ids(sc: Scenario) -> Tuple[int, ...]:
+    """The scenario's Byzantine worker ids (clipped so at least one honest
+    worker always remains — the engine-level validation invariant)."""
+    if sc.byz_ids is not None:
+        return tuple(int(i) for i in sc.byz_ids)
+    n = int(round(sc.byz_frac * sc.m))
+    return tuple(range(min(max(n, 0), sc.m - 1)))
+
+
+def engine_config(sc: Scenario) -> EngineConfig:
+    """The :class:`EngineConfig` a scenario lowers to. Adaptive attacks keep
+    ``attack='none'`` here — their vector comes from the ``attack_fn`` seam,
+    not the static Appendix D branch."""
+    from .adaptive import ADAPTIVE_ATTACKS
+    static = sc.attack not in ADAPTIVE_ATTACKS
+    akw = {k: v for k, v in sc.attack_params if k in AttackConfig._fields}
+    attack = AttackConfig(sc.attack, **akw) if static else AttackConfig("none")
+    return EngineConfig(
+        m=sc.m, byz=resolved_byz_ids(sc), attack=attack, agg=sc.agg,
+        lam=sc.lam, opt=sc.opt_resolved, arrival=sc.arrival,
+        byz_start_step=sc.byz_start_step, seed=sc.seed,
+        agg_backend=sc.agg_backend).validate()
+
+
+def compile_signature(sc: Scenario) -> tuple:
+    """Hashable key of everything that changes the jitted step's trace.
+
+    Scenarios with equal signatures share ONE compiled vmapped step; their
+    per-scenario knobs (byz ids, arrival probabilities, alpha, seed,
+    weighted flag) ride in as traced arguments. Note ``arrival`` collapses to
+    sampled-vs-round-robin: the three sampled distributions differ only in
+    the traced probability vector."""
+    arrival_kind = "rr" if sc.arrival == "round_robin" else "sampled"
+    return (sc.problem, sc.m, sc.batch, sc.attack, sc.attack_params, sc.agg,
+            float(sc.lam), sc.agg_backend, arrival_kind, sc.opt_resolved,
+            int(sc.byz_start_step))
+
+
+def group_scenarios(scenarios: List[Scenario]) -> Dict[tuple, List[int]]:
+    """Indices of ``scenarios`` grouped by :func:`compile_signature`
+    (insertion-ordered, so results can be re-scattered to input order)."""
+    groups: Dict[tuple, List[int]] = {}
+    for i, sc in enumerate(scenarios):
+        groups.setdefault(compile_signature(sc), []).append(i)
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Problem families
+# ---------------------------------------------------------------------------
+
+class Problem(NamedTuple):
+    """Everything the batched engine needs from a problem family: the flat
+    loss, parameter init, the per-worker batch stream (data heterogeneity
+    lives here), and the held-out evaluation."""
+    d: int
+    loss_fn: Callable                    # loss(flat_params, batch) -> scalar
+    init_params: Callable                # (sc) -> (d,) float32
+    stream: Callable                     # (sc) -> iterator of per-worker stacks
+    evaluate: Callable                   # (flat_params, sc) -> dict
+
+
+_QUAD_D = 30
+_QUAD_WSTAR = np.full((_QUAD_D,), 2.0, np.float32)
+
+
+def _quad_problem() -> Problem:
+    wstar = jnp.asarray(_QUAD_WSTAR)
+
+    def loss_fn(w, batch):
+        return 0.5 * jnp.mean(jnp.sum((w - wstar - batch["x"]) ** 2, -1)) \
+            + 0.0 * jnp.sum(batch["y"])
+
+    def init_params(sc: Scenario):
+        return jnp.zeros((_QUAD_D,), jnp.float32)
+
+    def stream(sc: Scenario):
+        rng = np.random.default_rng([sc.seed, 0x0_AD])
+        het = 0.0 if not math.isfinite(sc.alpha) else 1.0 / np.sqrt(sc.alpha)
+        shift = (het * np.random.default_rng([sc.seed, 0x5F7])
+                 .normal(size=(sc.m, 1, _QUAD_D))).astype(np.float32)
+        while True:
+            x = rng.normal(size=(sc.m, sc.batch, _QUAD_D)).astype(np.float32)
+            yield {"x": x + shift, "y": np.zeros((sc.m, sc.batch), np.int32)}
+
+    def evaluate(flat, sc: Scenario) -> dict:
+        # excess loss f(x_T) - f(x*) = 0.5·||x_T - w*||² (+ const noise var)
+        excess = 0.5 * float(jnp.sum((flat - wstar) ** 2))
+        return {"loss": excess, "excess": excess}
+
+    return Problem(_QUAD_D, loss_fn, init_params, stream, evaluate)
+
+
+_CLS_KW = dict(image_hw=MLP_SMALL.image_hw, channels=MLP_SMALL.channels,
+               n_classes=MLP_SMALL.n_classes, seed=0, sigma=1.6)
+
+
+def _cls_problem() -> Problem:
+    flat0, unravel = ravel_pytree_fn(
+        init_classifier(jax.random.PRNGKey(0), MLP_SMALL))
+
+    def loss_fn(w, batch):
+        return classifier_loss(unravel(w), MLP_SMALL, batch)
+
+    def init_params(sc: Scenario):
+        flat, _ = ravel_pytree_fn(
+            init_classifier(jax.random.PRNGKey(sc.seed), MLP_SMALL))
+        return flat
+
+    def stream(sc: Scenario):
+        it = heterogeneous_worker_batches(
+            sc.m, sc.batch, alpha=sc.alpha, sample_seed=sc.seed + 1,
+            shard_seed=sc.seed, **_CLS_KW)
+        for b in it:
+            yield {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    def evaluate(flat, sc: Scenario) -> dict:
+        test = make_classification_data(1024, sample_seed=10_000 + sc.seed,
+                                        **_CLS_KW)
+        batch = {"x": jnp.asarray(test["x"]), "y": jnp.asarray(test["y"])}
+        params = unravel(flat)
+        return {"loss": float(classifier_loss(params, MLP_SMALL, batch)),
+                "acc": float(classifier_accuracy(params, MLP_SMALL, batch))}
+
+    return Problem(int(flat0.shape[0]), loss_fn, init_params, stream, evaluate)
+
+
+PROBLEMS: Dict[str, Callable[[], Problem]] = {
+    "quadratic": _quad_problem,
+    "classifier": _cls_problem,
+}
+
+
+def build_problem(sc: Scenario) -> Problem:
+    """Instantiate the scenario's problem family (one per group — every
+    scenario in a compile group shares the problem by construction)."""
+    if sc.problem not in PROBLEMS:
+        raise KeyError(f"unknown problem {sc.problem!r}; "
+                       f"choose from {sorted(PROBLEMS)}")
+    return PROBLEMS[sc.problem]()

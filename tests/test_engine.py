@@ -153,3 +153,47 @@ def test_little_attack_zmax_tracks_updated_masses():
     expect = mu - z * np.sqrt(np.maximum(var, 0.0))
     np.testing.assert_allclose(np.asarray(st.D[2]), expect, rtol=1e-4,
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig construction-time validation
+# ---------------------------------------------------------------------------
+
+def _cfg(m, byz):
+    return EngineConfig(m=m, byz=byz, attack=AttackConfig("sign_flip"),
+                        agg="mean", lam=0.0,
+                        opt=OptConfig(name="sgd", lr=1e-3))
+
+
+def test_validate_rejects_out_of_range_byz_ids():
+    with pytest.raises(ValueError, match="out of range"):
+        _cfg(4, (0, 4)).validate()
+    with pytest.raises(ValueError, match="out of range"):
+        _cfg(4, (-1,)).validate()
+
+
+def test_validate_rejects_duplicate_byz_ids():
+    with pytest.raises(ValueError, match="duplicate"):
+        _cfg(5, (1, 3, 3)).validate()
+
+
+def test_validate_rejects_all_byzantine_fleet():
+    with pytest.raises(ValueError, match="honest"):
+        _cfg(3, (0, 1, 2)).validate()
+
+
+def test_validate_rejects_nonpositive_m():
+    with pytest.raises(ValueError, match="m must be"):
+        _cfg(0, ()).validate()
+
+
+def test_validate_accepts_valid_config_and_returns_self():
+    cfg = _cfg(5, (3, 4))
+    assert cfg.validate() is cfg
+
+
+def test_engine_constructor_validates():
+    """The engine itself must refuse a degenerate config, not just
+    validate() callers."""
+    with pytest.raises(ValueError, match="out of range"):
+        AsyncByzantineEngine(_cfg(4, (7,)), loss_fn, D_DIM)

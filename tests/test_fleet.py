@@ -1,0 +1,146 @@
+"""repro.fleet: scenario grouping, batched-vs-sequential parity, adaptive
+attackers, and the breakdown matrix."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.fleet import (FleetGroup, Scenario, breakdown_matrix,
+                         compile_signature, engine_config, group_scenarios,
+                         matrix_rows, matrix_scenarios, resolved_byz_ids,
+                         run_scenarios, run_sequential)
+
+QUAD = Scenario(problem="quadratic", attack="sign_flip", agg="ctma:cwmed",
+                m=5, byz_frac=0.2, steps=20, batch=4, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec + compile-signature grouping
+# ---------------------------------------------------------------------------
+
+def test_traced_knobs_share_a_compile_signature():
+    """byz mass, arrival distribution (within sampled kinds), heterogeneity,
+    seed and the weighted flag are DATA — same jit serves all of them."""
+    variants = [QUAD, QUAD._replace(seed=3), QUAD._replace(alpha=0.3),
+                QUAD._replace(byz_frac=0.6), QUAD._replace(weighted=False),
+                QUAD._replace(arrival="squared"), QUAD._replace(steps=7)]
+    assert len(group_scenarios(variants)) == 1
+
+
+def test_trace_changing_knobs_split_groups():
+    variants = [QUAD, QUAD._replace(attack="little"),
+                QUAD._replace(agg="cwmed"), QUAD._replace(m=7),
+                QUAD._replace(arrival="round_robin"),
+                QUAD._replace(lam=0.5)]
+    sigs = {compile_signature(sc) for sc in variants}
+    assert len(sigs) == len(variants)
+
+
+def test_resolved_byz_ids_round_and_clip():
+    assert resolved_byz_ids(QUAD._replace(m=9, byz_frac=2 / 9)) == (0, 1)
+    assert resolved_byz_ids(QUAD._replace(byz_ids=(3, 4))) == (3, 4)
+    # never all-Byzantine: frac 1.0 clips to m-1 ids
+    assert len(resolved_byz_ids(QUAD._replace(m=4, byz_frac=1.0))) == 3
+    cfg = engine_config(QUAD._replace(m=4, byz_frac=1.0))
+    assert len(cfg.byz) == 3
+
+
+def test_adaptive_scenarios_lower_to_attack_none():
+    cfg = engine_config(QUAD._replace(attack="adaptive_scale"))
+    assert cfg.attack.name == "none"
+
+
+def test_fleet_group_rejects_mixed_signatures():
+    with pytest.raises(ValueError, match="compile signatures"):
+        FleetGroup([QUAD, QUAD._replace(attack="little")])
+    grp = FleetGroup([QUAD])
+    with pytest.raises(ValueError, match="compile signature"):
+        grp.run([QUAD._replace(agg="cwmed")])
+
+
+# ---------------------------------------------------------------------------
+# Batched engine == sequential engine, step for step
+# ---------------------------------------------------------------------------
+
+def test_batched_matches_sequential_over_mixed_batch():
+    """A mixed group — different seeds, Byzantine masses, heterogeneity and
+    the weighted ablation — must reproduce each sequential trajectory
+    exactly (same streams, same RNG, one vmapped step)."""
+    scs = [QUAD,
+           QUAD._replace(seed=11, alpha=0.4),
+           QUAD._replace(byz_frac=0.6, weighted=False),
+           QUAD._replace(arrival="squared", seed=2)]
+    batched = run_scenarios(scs)
+    for sc, b in zip(scs, batched):
+        s = run_sequential(sc)
+        np.testing.assert_allclose(np.asarray(b.state.x),
+                                   np.asarray(s.state.x),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b.state.S),
+                                   np.asarray(s.state.S))
+        np.testing.assert_allclose(np.asarray(b.state.D),
+                                   np.asarray(s.state.D),
+                                   rtol=1e-5, atol=1e-6)
+        assert int(b.state.t) == sc.steps == int(s.state.t)
+
+
+def test_batched_parity_with_adaptive_attack():
+    sc = QUAD._replace(attack="adaptive_scale", steps=10,
+                       attack_params=(("gs_iters", 2), ("n_grid", 3)))
+    b, = run_scenarios([sc])
+    s = run_sequential(sc)
+    np.testing.assert_allclose(np.asarray(b.state.x), np.asarray(s.state.x),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mixed_horizons_snapshot_each_scenario():
+    scs = [QUAD._replace(steps=6), QUAD._replace(steps=14)]
+    r6, r14 = run_scenarios(scs)
+    assert int(r6.state.t) == 6 and int(r14.state.t) == 14
+    s6 = run_sequential(scs[0])
+    np.testing.assert_allclose(np.asarray(r6.state.x),
+                               np.asarray(s6.state.x), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive attackers + the breakdown matrix
+# ---------------------------------------------------------------------------
+
+def test_adaptive_attack_beats_its_static_counterpart():
+    """The scale-searching attacker tunes z against the resolved ω-CTMA rule
+    every step; the static little attack fixes z from mass counts alone. The
+    adaptive cell must end at STRICTLY higher loss."""
+    base = Scenario(problem="quadratic", agg="ctma:cwmed", m=6,
+                    byz_frac=1 / 3, steps=40, batch=4, seed=0)
+    static, adaptive = run_scenarios([
+        base._replace(attack="little"),
+        base._replace(attack="adaptive_scale",
+                      attack_params=(("n_grid", 5), ("gs_iters", 3)))])
+    assert adaptive.eval["loss"] > static.eval["loss"]
+
+
+def test_breakdown_matrix_rows_and_bisection():
+    scs = matrix_scenarios(problem="quadratic", attacks=("sign_flip",),
+                           aggs=("ctma:cwmed",), arrivals=("proportional",),
+                           alphas=(math.inf,), m=5, byz_frac=0.2, steps=15,
+                           batch=4)
+    rows = breakdown_matrix(scs, bisect_steps=10)
+    assert len(rows) == 1
+    r = rows[0]
+    for key in ("cell", "final_loss", "honest_loss", "breakdown_count",
+                "breakdown_frac", "agg_us_per_call", "engine_us_per_step"):
+        assert key in r
+    assert math.isfinite(r["final_loss"]) and math.isfinite(r["honest_loss"])
+    assert 1 <= r["breakdown_count"] <= r["m"]
+    assert r["breakdown_frac"] == r["breakdown_count"] / r["m"]
+    assert r["agg_us_per_call"] > 0
+    csv = matrix_rows(rows)
+    assert len(csv) == 1 and csv[0].startswith("robust_")
+    assert "breakdown_frac=" in csv[0] and "honest=" in csv[0]
+
+
+def test_matrix_scenarios_grid_size():
+    scs = matrix_scenarios(attacks=("a", "b"), aggs=("x",),
+                           arrivals=("proportional", "squared"),
+                           alphas=(math.inf, 0.3), seeds=(0, 1))
+    assert len(scs) == 2 * 1 * 2 * 2 * 2
