@@ -1,0 +1,109 @@
+"""Runtime compile-count sentinel: pin "how many times did XLA compile?".
+
+The repo's two perf keystones are compile-amortization contracts, not
+numbers: the fleet runs ONE ``jit(vmap(step))`` per compile-signature group
+(fleet/scenario.py), and the serve engine compiles one prefill per prompt
+bucket plus one decode step (serve/engine.py warmup). Nothing enforced them
+— a stray Python-int argument or a drifted bucket table silently
+reintroduces per-call recompiles and only a benchmark notices. This module
+makes the contract testable:
+
+    with compile_count() as c:
+        engine.run(requests, warmup=False)
+    assert c.count == 0          # zero recompiles across the workload
+
+Built on :mod:`jax.monitoring` duration events — every XLA backend compile
+fires ``/jax/core/compile/backend_compile_duration``, while tracing-cache
+hits fire only the trace event. Counting is process-global, so pin tests
+must warm JAX's internal eager-op caches (a throwaway run of the same
+shapes) before measuring deltas; ``c.events`` keeps the per-event log for
+diagnosing which compile broke the pin.
+
+Used by tests/test_lint_runtime.py to pin: one compile group per fleet
+shape class, one compile per scheduler prompt bucket across a synthetic
+workload, and zero recompiles across breakdown-bisection probes
+(fleet/matrix.py ``run_cached``).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Iterator, List, Tuple
+
+from jax import monitoring
+
+# jax/_src/dispatch.py event names (stable across the 0.4.x line)
+BACKEND_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+TRACE_EVENT = "/jax/core/compile/jaxpr_trace_duration"
+
+
+@dataclass
+class CompileCounter:
+    """Live tally of compile activity inside a :func:`compile_count` block.
+
+    ``count`` is the number of XLA backend compiles (the expensive event a
+    pin test cares about); ``traces`` counts jaxpr retraces (a superset —
+    cache hits retrace without recompiling); ``events`` is the raw
+    ``(event, seconds)`` log."""
+    count: int = 0
+    traces: int = 0
+    events: List[Tuple[str, float]] = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _active: bool = field(default=True, repr=False)
+
+    def record(self, event: str, duration: float) -> None:
+        if not self._active:
+            return
+        with self._lock:
+            if event == BACKEND_COMPILE_EVENT:
+                self.count += 1
+            elif event == TRACE_EVENT:
+                self.traces += 1
+            self.events.append((event, duration))
+
+
+def _unregister(callback) -> bool:
+    """Best-effort removal of a duration listener (private API in 0.4.x;
+    the counter deactivates itself regardless, so failure is benign)."""
+    try:
+        from jax._src import monitoring as _m
+        _m._unregister_event_duration_listener_by_callback(callback)
+        return True
+    except Exception:
+        return False
+
+
+@contextmanager
+def compile_count() -> Iterator[CompileCounter]:
+    """Count XLA backend compiles (and retraces) within the block.
+
+    Process-global: compiles triggered by other threads land in the same
+    tally, and JAX's internal eager ops (``jnp.ones`` et al.) compile too on
+    first use — warm them before pinning deltas."""
+    counter = CompileCounter()
+
+    def listener(event: str, duration: float, **_kw) -> None:
+        counter.record(event, duration)
+
+    monitoring.register_event_duration_secs_listener(listener)
+    try:
+        yield counter
+    finally:
+        counter._active = False
+        _unregister(listener)
+
+
+def warmup_eager_cache() -> None:
+    """Compile the tiny eager ops pin tests would otherwise count.
+
+    First use of ``jnp.ones``/``jnp.zeros``/``jnp.arange``/scalar casts each
+    costs a backend compile of its own; running them once up front keeps a
+    subsequent :func:`compile_count` block measuring only the compiles the
+    code under test owns."""
+    import jax.numpy as jnp
+
+    ops = [jnp.ones(8), jnp.zeros(8), jnp.arange(8),
+           jnp.asarray(1.0), jnp.asarray(1, jnp.int32)]
+    for x in ops:
+        x.block_until_ready()

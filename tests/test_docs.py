@@ -1,23 +1,40 @@
-"""Docs health stays pinned in tier-1 (CI also runs tools/docs_check.py as
-its own step): no broken intra-repo markdown links, no public src/repro
-module without a docstring."""
+"""Docs health stays pinned in tier-1 (CI runs the lint driver's ``docs``
+group): no broken intra-repo markdown links, no public src/repro module
+without a docstring. The checks live in tools/lint/docs_rules.py (RD201 /
+RD202); tools/docs_check.py remains as a one-PR back-compat shim whose
+old list-of-strings API is pinned here too."""
 import importlib.util
 import pathlib
+import subprocess
 import sys
 
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "tools"))
 
-def _load_docs_check():
-    path = pathlib.Path(__file__).resolve().parents[1] / "tools" / "docs_check.py"
+from lint import docs_rules
+
+
+def test_no_broken_markdown_links():
+    assert docs_rules.check_links() == []
+
+
+def test_public_modules_have_docstrings():
+    assert docs_rules.check_docstrings() == []
+
+
+def test_docs_group_through_driver():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "lint.py"), "--only", "docs"],
+        cwd=ROOT, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_docs_check_shim_keeps_old_api():
+    path = ROOT / "tools" / "docs_check.py"
     spec = importlib.util.spec_from_file_location("docs_check", path)
     mod = importlib.util.module_from_spec(spec)
     sys.modules["docs_check"] = mod
     spec.loader.exec_module(mod)
-    return mod
-
-
-def test_no_broken_markdown_links():
-    assert _load_docs_check().check_links() == []
-
-
-def test_public_modules_have_docstrings():
-    assert _load_docs_check().check_docstrings() == []
+    assert mod.check_links() == []
+    assert mod.check_docstrings() == []
+    assert mod.main() == 0

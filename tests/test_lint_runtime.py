@@ -1,0 +1,155 @@
+"""Compile-count pins via repro.lint_runtime.compile_count().
+
+These are the regression guards the compile-amortization architecture
+promised but never enforced:
+
+- **fleet**: ONE XLA backend compile per compile-signature group
+  (fleet/scenario.py grouping feeding ``jit(vmap(step))``), and ZERO new
+  compiles when the same group re-runs same-signature scenarios (different
+  seeds / Byzantine masses / the weighted flag are traced data).
+- **scheduler**: a fresh ServeEngine warmup costs exactly one prefill
+  compile per prompt bucket plus the decode step and first-token sampler
+  (n_buckets + 2), and a full synthetic workload after warmup recompiles
+  NOTHING.
+- **bisection**: breakdown-matrix probes over Byzantine mass reuse the
+  already-compiled fleet step (fleet/matrix.py ``run_cached``) — a second
+  matrix pass with a shared group cache is compile-free.
+
+Counting is process-global, so every pin measures a DELTA after a
+throwaway warm pass over identical shapes (jnp eager ops compile per shape
+on first use; see lint_runtime docstring).
+"""
+import copy
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.fleet import (FleetGroup, Scenario, breakdown_matrix,
+                         matrix_scenarios, run_scenarios)
+from repro.lint_runtime import (BACKEND_COMPILE_EVENT, compile_count,
+                                warmup_eager_cache)
+from repro.models import ModelConfig, init_lm
+from repro.serve import ServeConfig, ServeEngine, synth_workload
+
+QUAD = Scenario(problem="quadratic", attack="sign_flip", agg="ctma:cwmed",
+                m=5, byz_frac=0.2, steps=6, batch=4, seed=0)
+
+V = 64
+DENSE = ModelConfig(name="dense", n_layers=2, d_model=32, n_heads=4, n_kv=2,
+                    d_ff=64, vocab=V, qkv_bias=True)
+SCFG = ServeConfig(n_slots=3, max_len=64, max_prefill_batch=2)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _warm_eager():
+    warmup_eager_cache()
+
+
+# ---------------------------------------------------------------------------
+# the sentinel itself
+# ---------------------------------------------------------------------------
+
+def test_sentinel_counts_compiles_and_cache_hits():
+    f = jax.jit(lambda x: x * 2.0 + 1.0)
+    with compile_count() as c1:
+        f(jnp.ones(16)).block_until_ready()
+    assert c1.count >= 1
+    assert any(ev == BACKEND_COMPILE_EVENT for ev, _ in c1.events)
+    with compile_count() as c2:
+        f(jnp.ones(16)).block_until_ready()
+    assert c2.count == 0          # cache hit: no backend compile
+    with compile_count() as c3:
+        f(jnp.ones(32)).block_until_ready()
+    assert c3.count >= 1          # new shape: recompile
+
+    # a deactivated counter must not keep tallying after the block exits
+    n = c3.count
+    jax.jit(lambda x: x - 3.0)(jnp.ones(16)).block_until_ready()
+    assert c3.count == n
+
+
+# ---------------------------------------------------------------------------
+# fleet: one compile group per shape class
+# ---------------------------------------------------------------------------
+
+def test_fleet_one_compile_per_signature_group():
+    one_group = [QUAD, QUAD._replace(seed=3)]
+    two_groups = [QUAD, QUAD._replace(agg="cwmed")]
+    # throwaway pass: warm per-shape eager caches for both group layouts
+    run_scenarios(one_group)
+    run_scenarios(two_groups)
+
+    with compile_count() as c1:
+        run_scenarios(one_group)
+    assert c1.count == 1, c1.events
+
+    with compile_count() as c2:
+        run_scenarios(two_groups)
+    assert c2.count == 2, c2.events
+
+
+def test_fleet_group_rerun_is_compile_free():
+    grp = FleetGroup([QUAD, QUAD._replace(seed=3)])
+    grp.run()
+    # same compile signature, different traced knobs: byz mass, seed,
+    # weighted ablation — all must ride the already-compiled vmapped step
+    with compile_count() as c:
+        grp.run([QUAD._replace(seed=9),
+                 QUAD._replace(byz_frac=0.6, weighted=False)])
+    assert c.count == 0, c.events
+
+
+# ---------------------------------------------------------------------------
+# scheduler: one prefill compile per prompt bucket
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_params():
+    return init_lm(jax.random.PRNGKey(0), DENSE)
+
+
+def test_scheduler_one_compile_per_bucket(dense_params):
+    reqs = synth_workload(8, V, seed=0, prompt_lens=(4, 24), gen_lens=(2, 8))
+    # throwaway engine warms every eager-op shape this workload touches
+    ServeEngine(DENSE, dense_params, SCFG).run(
+        [copy.deepcopy(r) for r in reqs])
+
+    eng = ServeEngine(DENSE, dense_params, SCFG)
+    lens = [r.prompt_len for r in reqs]
+    n_buckets = len({eng.sched.bucket_for(l) for l in lens})
+    assert n_buckets >= 2         # the workload must actually span buckets
+
+    with compile_count() as cw:
+        eng.warmup(lens)
+    # one prefill compile per bucket + the decode step + first-token sampler
+    assert cw.count == n_buckets + 2, cw.events
+
+    with compile_count() as cr:
+        eng.run([copy.deepcopy(r) for r in reqs], warmup=False)
+    assert cr.count == 0, cr.events
+
+
+# ---------------------------------------------------------------------------
+# breakdown bisection: probes reuse the compiled step
+# ---------------------------------------------------------------------------
+
+def test_bisection_probes_are_compile_free():
+    scs = matrix_scenarios(problem="quadratic", attacks=("sign_flip",),
+                           aggs=("ctma:cwmed",), arrivals=("proportional",),
+                           alphas=(math.inf,), m=5, byz_frac=0.2, steps=8,
+                           batch=4)
+    cache = {}
+    # first pass compiles the group(s) into the shared cache
+    rows1 = breakdown_matrix(scs, bisect_steps=6, time_aggs=False,
+                             cache=cache)
+    assert len(cache) >= 1
+    # the entire second matrix — including every bisection probe — must
+    # ride the cached compiled steps (time_aggs=False: the agg timer jits
+    # a fresh fn per call by design and is excluded from the pin)
+    with compile_count() as c:
+        rows2 = breakdown_matrix(scs, bisect_steps=6, time_aggs=False,
+                                 cache=cache)
+    assert c.count == 0, c.events
+    assert rows1[0]["final_loss"] == rows2[0]["final_loss"]

@@ -1,82 +1,42 @@
-"""Docs health check, run by CI next to the serve smoke step.
+"""Back-compat shim over the replint ``docs`` rule group (one PR only).
 
-Two failure classes, both cheap and deterministic:
-
-1. **Broken intra-repo markdown links** — every ``[text](target)`` in the
-   repo's own ``*.md`` files whose target is a relative path must resolve on
-   disk (anchors are stripped; http(s)/mailto links are out of scope).
-   PAPER.md / PAPERS.md / SNIPPETS.md are retrieval dumps of external
-   material, not repo docs, and are skipped.
-2. **Public modules missing docstrings** — every non-underscore module under
-   ``src/repro`` must open with a module docstring; the READMEs can only
-   stay navigable if each module says what it is.
-
-    python tools/docs_check.py          # exit 1 + report on any failure
-
-Importable as a module (``check_links`` / ``check_docstrings``) so the tier-1
-suite can pin the repo green without a subprocess.
+The docs health check moved into the lint driver as rules RD201/RD202 —
+``python tools/lint.py --only docs`` is the canonical invocation now (see
+tools/lint/README.md). This entry point keeps the old CLI and the old
+``check_links()``/``check_docstrings() -> list[str]`` API alive for one PR
+so external callers can migrate.
 """
 from __future__ import annotations
 
-import ast
-import re
 import sys
 from pathlib import Path
 
-ROOT = Path(__file__).resolve().parents[1]
-# external-material dumps, not repo docs
-SKIP_MD = {"PAPER.md", "PAPERS.md", "SNIPPETS.md"}
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-
-def _repo_markdown() -> list[Path]:
-    return [p for p in sorted(ROOT.rglob("*.md"))
-            if ".git" not in p.parts and "__pycache__" not in p.parts
-            and p.name not in SKIP_MD]
+from lint import docs_rules as _docs
 
 
 def check_links() -> list[str]:
     """Broken relative links in repo markdown; [] when healthy."""
-    errors = []
-    for md in _repo_markdown():
-        for m in LINK_RE.finditer(md.read_text()):
-            target = m.group(1)
-            if target.startswith(("http://", "https://", "mailto:", "#")):
-                continue
-            path = target.split("#")[0]
-            if path and not (md.parent / path).exists():
-                errors.append(f"{md.relative_to(ROOT)}: broken link "
-                              f"-> {target}")
-    return errors
+    return [f"{f.path}: broken link -> {f.message.split('-> ')[-1]}"
+            for f in _docs.check_links()]
 
 
 def check_docstrings() -> list[str]:
     """Public src/repro modules missing a module docstring; [] when healthy."""
-    errors = []
-    for py in sorted((ROOT / "src" / "repro").rglob("*.py")):
-        if "__pycache__" in py.parts:
-            continue
-        if py.name.startswith("_") and py.name != "__init__.py":
-            continue  # private modules opt out
-        try:
-            tree = ast.parse(py.read_text())
-        except SyntaxError as e:  # pragma: no cover - would fail tests anyway
-            errors.append(f"{py.relative_to(ROOT)}: unparseable ({e})")
-            continue
-        if ast.get_docstring(tree) is None:
-            errors.append(f"{py.relative_to(ROOT)}: missing module docstring")
-    return errors
+    return [f"{f.path}: {f.message}" for f in _docs.check_docstrings()]
 
 
 def main() -> int:
-    errors = check_links() + check_docstrings()
-    for e in errors:
-        print(f"docs-check: {e}", file=sys.stderr)
-    if errors:
-        print(f"docs-check: {len(errors)} problem(s)", file=sys.stderr)
+    findings = _docs.docs_findings()
+    for f in findings:
+        print(f"docs-check: {f.render()}", file=sys.stderr)
+    if findings:
+        print(f"docs-check: {len(findings)} problem(s)", file=sys.stderr)
         return 1
-    n_md = len(_repo_markdown())
-    print(f"docs-check: OK ({n_md} markdown files, links + docstrings clean)")
+    n_md = len(_docs.repo_markdown())
+    print(f"docs-check: OK ({n_md} markdown files, links + docstrings clean)"
+          f" [shim — use: python tools/lint.py --only docs]")
     return 0
 
 

@@ -1,0 +1,75 @@
+"""replint docs rule group RD201/RD202 (absorbed from tools/docs_check.py).
+
+| code  | check                                                             |
+|-------|-------------------------------------------------------------------|
+| RD201 | broken intra-repo relative markdown link                          |
+| RD202 | public ``src/repro`` module missing a module docstring            |
+
+Unlike the AST groups these are repo-wide, not per-target-path: links span
+the whole markdown tree and the docstring contract covers all of
+``src/repro`` regardless of what subset was passed to the driver.
+``tools/docs_check.py`` remains as a thin shim over this module for one PR.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List
+
+from .engine import REPO_ROOT, Finding
+
+# external-material dumps, not repo docs
+SKIP_MD = {"PAPER.md", "PAPERS.md", "SNIPPETS.md"}
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def repo_markdown(root: Path = REPO_ROOT) -> List[Path]:
+    return [p for p in sorted(root.rglob("*.md"))
+            if ".git" not in p.parts and "__pycache__" not in p.parts
+            and p.name not in SKIP_MD]
+
+
+def check_links(root: Path = REPO_ROOT) -> List[Finding]:
+    """RD201: every relative ``[text](target)`` in repo markdown must
+    resolve on disk (anchors stripped; http(s)/mailto out of scope)."""
+    findings = []
+    for md in repo_markdown(root):
+        for ln, line in enumerate(md.read_text().splitlines(), start=1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                path = target.split("#")[0]
+                if path and not (md.parent / path).exists():
+                    findings.append(Finding(
+                        "RD201", md.relative_to(root).as_posix(), ln,
+                        f"broken link -> {target}"))
+    return findings
+
+
+def check_docstrings(root: Path = REPO_ROOT) -> List[Finding]:
+    """RD202: every non-underscore module under src/repro opens with a
+    module docstring (the READMEs stay navigable only if each module says
+    what it is)."""
+    findings = []
+    for py in sorted((root / "src" / "repro").rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        if py.name.startswith("_") and py.name != "__init__.py":
+            continue  # private modules opt out
+        rel = py.relative_to(root).as_posix()
+        try:
+            tree = ast.parse(py.read_text())
+        except SyntaxError as e:  # pragma: no cover - tier-1 would fail first
+            findings.append(Finding("RD202", rel, e.lineno or 0,
+                                    f"unparseable ({e.msg})"))
+            continue
+        if ast.get_docstring(tree) is None:
+            findings.append(Finding("RD202", rel, 1,
+                                    "missing module docstring"))
+    return findings
+
+
+def docs_findings(root: Path = REPO_ROOT) -> List[Finding]:
+    return check_links(root) + check_docstrings(root)

@@ -1,0 +1,197 @@
+"""replint core: findings, suppressions, file walking, report assembly.
+
+A :class:`Finding` is one (rule, file, line) diagnostic. Rules are callables
+``rule(module: ModuleUnderLint) -> list[Finding]`` registered per group in
+``tools/lint/__init__.py``; the driver runs the requested groups over every
+Python file in the target paths, applies ``# replint: disable=RLxxx``
+suppressions (which REQUIRE a ``-- justification`` tail and are themselves
+counted in the report), and exits non-zero on any unsuppressed finding.
+
+Suppression grammar, one source line::
+
+    risky_call()   # replint: disable=RL101 -- insert donates; rebound below
+
+Multiple codes separate with commas (``disable=RL101,RL104``). A suppression
+with no justification is a finding in its own right (``RL000``), so silent
+opt-outs cannot accumulate.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+# suppression with justification: "# replint: disable=RL101[,RL104] -- why"
+_SUPPRESS_RE = re.compile(
+    r"#\s*replint:\s*disable=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"(?:\s*--\s*(\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: stable rule code, location, human message."""
+    code: str
+    path: str               # repo-relative posix path
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """A parsed ``# replint: disable=`` pragma (always reported, never silent)."""
+    codes: tuple
+    path: str
+    line: int
+    justification: str
+
+
+class ModuleUnderLint:
+    """One parsed source file handed to every AST rule.
+
+    Caches the parse tree, the raw source lines (for suppression scanning)
+    and a parent-pointer map (``parent_of``) so rules can walk outward from a
+    node — e.g. to find the enclosing function of a call site."""
+
+    def __init__(self, path: Path, root: Path = REPO_ROOT):
+        self.abspath = path
+        self.path = path.resolve().relative_to(root).as_posix() \
+            if path.resolve().is_relative_to(root) else path.as_posix()
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self._parents[child] = node
+
+    def parent_of(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parent_of(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur
+            cur = self.parent_of(cur)
+        return None
+
+    def suppressions(self) -> List[Suppression]:
+        out = []
+        for ln, text in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(text)
+            if m:
+                codes = tuple(c.strip() for c in m.group(1).split(","))
+                out.append(Suppression(codes, self.path, ln,
+                                       (m.group(2) or "").strip()))
+        return out
+
+
+Rule = Callable[[ModuleUnderLint], List[Finding]]
+
+
+def iter_python_files(paths: Iterable[Path]) -> List[Path]:
+    """Every ``*.py`` under the given files/dirs, skipping caches and the
+    lint fixtures (they are intentionally-bad snippets)."""
+    files: List[Path] = []
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            files.append(p)
+        elif p.is_dir():
+            files.extend(q for q in sorted(p.rglob("*.py"))
+                         if "__pycache__" not in q.parts
+                         and "fixtures" not in q.parts)
+    return files
+
+
+def apply_suppressions(findings: List[Finding],
+                       sups: List[Suppression]) -> tuple[List[Finding],
+                                                         List[Finding]]:
+    """Split findings into (active, suppressed). A suppression covers its own
+    source line only; unjustified pragmas surface as RL000 findings."""
+    covered = {}
+    for s in sups:
+        for c in s.codes:
+            covered.setdefault((s.path, s.line, c), s)
+    active, suppressed = [], []
+    for f in findings:
+        if (f.path, f.line, f.code) in covered:
+            suppressed.append(f)
+        else:
+            active.append(f)
+    for s in sups:
+        if not s.justification:
+            active.append(Finding(
+                "RL000", s.path, s.line,
+                f"suppression of {','.join(s.codes)} has no justification "
+                f"(write '# replint: disable=<codes> -- <why>')"))
+    return active, suppressed
+
+
+def lint_files(files: List[Path], rules: List[Rule]
+               ) -> tuple[List[Finding], List[Finding], List[Suppression]]:
+    """Run ``rules`` over ``files``; returns (active, suppressed, pragmas)."""
+    findings: List[Finding] = []
+    sups: List[Suppression] = []
+    for path in files:
+        try:
+            mod = ModuleUnderLint(path)
+        except SyntaxError as e:
+            findings.append(Finding("RL999", str(path), e.lineno or 0,
+                                    f"unparseable: {e.msg}"))
+            continue
+        sups.extend(mod.suppressions())
+        for rule in rules:
+            findings.extend(rule(mod))
+    active, suppressed = apply_suppressions(findings, sups)
+    active.sort(key=lambda f: (f.path, f.line, f.code))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.code))
+    return active, suppressed, sups
+
+
+def build_report(active: List[Finding], suppressed: List[Finding],
+                 sups: List[Suppression], *, groups: List[str],
+                 files: List[Path], extra: Optional[dict] = None) -> dict:
+    """JSON-ready lint report (the CI artifact)."""
+    report = {
+        "tool": "replint",
+        "groups": groups,
+        "n_files": len(files),
+        "n_findings": len(active),
+        "n_suppressed": len(suppressed),
+        "findings": [f.as_dict() for f in active],
+        "suppressed": [f.as_dict() for f in suppressed],
+        "suppressions": [dataclasses.asdict(s) for s in sups],
+    }
+    if extra:
+        report.update(extra)
+    return report
+
+
+def emit(report: dict, report_path: Optional[str], stream=sys.stderr) -> int:
+    """Print findings, optionally write the JSON report; return exit code."""
+    for f in report["findings"]:
+        print(f"{f['path']}:{f['line']}: {f['code']} {f['message']}",
+              file=stream)
+    if report_path:
+        Path(report_path).write_text(json.dumps(report, indent=2) + "\n")
+    n = report["n_findings"]
+    tag = "replint"
+    if n:
+        print(f"{tag}: {n} finding(s) "
+              f"({report['n_suppressed']} suppressed)", file=stream)
+        return 1
+    print(f"{tag}: OK ({report['n_files']} files, "
+          f"{report['n_suppressed']} suppressed finding(s))")
+    return 0

@@ -1,0 +1,23 @@
+"""RL101 bad fixture: donated buffer read after the donating call."""
+import jax
+
+
+def step(state, x):
+    return state + x, x
+
+
+class Engine:
+    def __init__(self):
+        self._step = jax.jit(step, donate_argnums=(0,))
+        self.state = None
+
+    def run_use_after_donate(self, state, x):
+        new_state, tok = self._step(state, x)   # donates `state`
+        return state + tok                      # BAD: reads the dead buffer
+
+    def run_loop_no_rebind(self, state, xs):
+        outs = []
+        for x in xs:
+            out, _ = self._step(state, x)       # BAD: donated, reused next iter
+            outs.append(out)
+        return outs

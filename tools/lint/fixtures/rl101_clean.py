@@ -1,0 +1,27 @@
+"""RL101 clean twin: donated buffers are always rebound before reuse."""
+import jax
+
+
+def step(state, x):
+    return state + x, x
+
+
+class Engine:
+    def __init__(self):
+        self._step = jax.jit(step, donate_argnums=(0,))
+        self.state = None
+
+    def run(self, state, x):
+        state, tok = self._step(state, x)       # result rebinds the donation
+        return state + tok
+
+    def run_loop(self, state, xs):
+        outs = []
+        for x in xs:
+            state, out = self._step(state, x)   # rebound every iteration
+            outs.append(out)
+        return state, outs
+
+    def run_attr(self, x):
+        self.state = self._step(self.state, x)[0]   # attr path rebound
+        return self.state

@@ -1,0 +1,22 @@
+"""RL102 bad fixture: jit params steer Python control flow without being
+static."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branchy(x, mode):
+    if mode:                      # BAD: `mode` is traced, branch is Python
+        return x * 2.0
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def loopy(x, depth, iters):
+    for _ in range(iters):        # BAD: `iters` not in static_argnames
+        x = x + 1.0
+    for _ in range(depth):        # fine: depth is static
+        x = x * 0.5
+    return jnp.tanh(x)

@@ -1,0 +1,24 @@
+"""RL102 clean twin: control-flow-steering params are static (or the use is
+trace-safe: shape/None checks)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def branchy(x, mode):
+    if mode:                      # fine: mode is static
+        return x * 2.0
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def loopy(x, iters, scale=None):
+    if scale is None:             # fine: `is None` dispatch is trace-safe
+        scale = 1.0
+    for _ in range(iters):        # fine: iters is static
+        x = x + scale
+    for _ in range(x.ndim):       # fine: shapes are static under tracing
+        x = jnp.expand_dims(x, 0)
+    return x

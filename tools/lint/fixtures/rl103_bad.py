@@ -1,0 +1,10 @@
+"""RL103 bad fixture: Python branch on a traced value inside a jitted fn."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_if_large(x):
+    if jnp.max(jnp.abs(x)) > 1e3:     # BAD: TracerBoolConversionError
+        return jnp.clip(x, -1e3, 1e3)
+    return x

@@ -1,0 +1,16 @@
+"""RL103 clean twin: data-dependent selection stays inside the trace."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_if_large(x):
+    big = jnp.max(jnp.abs(x)) > 1e3
+    return jnp.where(big, jnp.clip(x, -1e3, 1e3), x)
+
+
+def host_side(x):
+    # not jitted: a Python branch on a concrete array is fine here
+    if jnp.max(jnp.abs(x)) > 1e3:
+        return jnp.clip(x, -1e3, 1e3)
+    return x

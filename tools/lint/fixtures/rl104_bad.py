@@ -1,0 +1,15 @@
+"""RL104 bad fixture: unseeded global-RNG draws and a host clock in jit."""
+import time
+
+import jax
+import numpy as np
+
+
+def make_batch(n):
+    return np.random.randn(n, 4)      # BAD: unseeded global RNG
+
+
+@jax.jit
+def stamped(x):
+    t = time.time()                   # BAD: baked in at trace time
+    return x + t

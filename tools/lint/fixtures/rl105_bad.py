@@ -1,0 +1,7 @@
+"""RL105 bad fixture: functional .at[] update result silently discarded."""
+import jax.numpy as jnp
+
+
+def zero_row(x, i):
+    x.at[i].set(0.0)                  # BAD: builds a copy and throws it away
+    return x

@@ -1,0 +1,7 @@
+"""RL105 clean twin: the .at[] update result is assigned."""
+import jax.numpy as jnp
+
+
+def zero_row(x, i):
+    x = x.at[i].set(0.0)
+    return x

@@ -1,0 +1,12 @@
+"""RP303 bad fixture: page pool allocated without the reserved dump page."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_pool(n_pages, page_size, kv, hd, n_slots, pages_per_slot):
+    # block table points unallocated pages at index n_pages ...
+    table = np.full((n_slots + 1, pages_per_slot), n_pages, np.int32)
+    # ... but the pool has no physical page n_pages: out-of-bounds gather
+    k_pool = jnp.zeros((n_pages, page_size, kv, hd), jnp.float32)  # BAD
+    v_pool = jnp.zeros((n_pages, page_size, kv, hd), jnp.float32)  # BAD
+    return k_pool, v_pool, table

@@ -1,0 +1,10 @@
+"""RP303 clean twin: pools reserve the dump page the block table targets."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_pool(n_pages, page_size, kv, hd, n_slots, pages_per_slot):
+    table = np.full((n_slots + 1, pages_per_slot), n_pages, np.int32)
+    k_pool = jnp.zeros((n_pages + 1, page_size, kv, hd), jnp.float32)
+    v_pool = jnp.zeros((n_pages + 1, page_size, kv, hd), jnp.float32)
+    return k_pool, v_pool, table

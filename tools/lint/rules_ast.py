@@ -1,0 +1,501 @@
+"""replint AST rules RL101–RL105: JAX-specific hazards the type system can't see.
+
+| code  | hazard                                                              |
+|-------|---------------------------------------------------------------------|
+| RL101 | buffer passed through a ``donate_argnums`` position referenced again |
+| RL102 | jit param flows into Python ``if``/``while``/``range`` but is not in ``static_argnames`` |
+| RL103 | Python-level branch on a traced value (``jnp.*``/``lax.*`` call in a test) inside a jitted function |
+| RL104 | unseeded legacy ``np.random.*`` globals anywhere; ``time.time``/``perf_counter`` inside jitted code |
+| RL105 | result of ``x.at[...].set(...)`` discarded — silently a no-op copy   |
+
+All rules are intraprocedural and name-based: they resolve ``jax.jit``
+wrappings both in decorator form (``@jax.jit``, ``@partial(jax.jit, ...)``)
+and assignment form (``self._step = jax.jit(self._step_impl, ...)``), and
+track donated buffers as dotted paths (``state``, ``self.cache``) through the
+statement list of the enclosing function.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, ModuleUnderLint
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``Name``/``Attribute`` chain as a dotted string, else None."""
+    parts = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return _dotted(node) in ("jax.jit", "jit")
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """Return the ``jax.jit(...)`` Call if ``node`` is one, unwrapping
+    ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    if _is_jax_jit(node.func):
+        return node
+    if _dotted(node.func) in ("partial", "functools.partial") and node.args \
+            and _is_jax_jit(node.args[0]):
+        return node
+    return None
+
+
+def _int_tuple(node: ast.AST) -> Optional[Tuple[int, ...]]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(el.value for el in node.elts
+                     if isinstance(el, ast.Constant)
+                     and isinstance(el.value, str))
+    return ()
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _module_functions(mod: ModuleUnderLint) -> Dict[str, ast.FunctionDef]:
+    """All function defs in the module keyed by bare name (methods included;
+    last definition wins, which matches attribute lookup well enough)."""
+    return {n.name: n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _jitted_functions(mod: ModuleUnderLint
+                      ) -> List[Tuple[ast.FunctionDef, Set[str]]]:
+    """Every function the module jit-wraps, with its static param names.
+
+    Covers decorator form (``@jax.jit`` / ``@partial(jax.jit, ...)``) and
+    assignment form (``f2 = jax.jit(f, static_argnames=...)`` where ``f``
+    is a Name or ``self.method`` defined in this module)."""
+    defs = _module_functions(mod)
+    out: List[Tuple[ast.FunctionDef, Set[str]]] = []
+    seen: Set[ast.FunctionDef] = set()
+
+    def statics(jit: ast.Call, fn: ast.FunctionDef) -> Set[str]:
+        names = set(_str_tuple(_kw(jit, "static_argnames") or ast.Tuple([], ast.Load())))
+        nums = _int_tuple(_kw(jit, "static_argnums") or ast.Constant(None)) or ()
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        for i in nums:
+            if 0 <= i < len(params):
+                names.add(params[i])
+        return names
+
+    for fn in defs.values():
+        for dec in fn.decorator_list:
+            jit = _jit_call(dec) if isinstance(dec, ast.Call) else None
+            if jit is None and _is_jax_jit(dec):
+                jit = ast.Call(dec, [], [])  # bare @jax.jit, no statics
+            if jit is not None and fn not in seen:
+                out.append((fn, statics(jit, fn)))
+                seen.add(fn)
+    for node in ast.walk(mod.tree):
+        jit = _jit_call(node)
+        if jit is None:
+            continue
+        # first positional arg of jax.jit (or second of partial) is the fn
+        if _dotted(jit.func) in ("partial", "functools.partial"):
+            target = jit.args[1] if len(jit.args) > 1 else None
+        else:
+            target = jit.args[0] if jit.args else None
+        # unwrap jax.jit(jax.vmap(f, ...)) down to f
+        while isinstance(target, ast.Call) \
+                and _dotted(target.func) in ("jax.vmap", "vmap") \
+                and target.args:
+            target = target.args[0]
+        if target is None:
+            continue
+        name = _dotted(target)
+        if name is None:
+            continue
+        bare = name.split(".")[-1]
+        fn = defs.get(bare)
+        if fn is not None and fn not in seen:
+            out.append((fn, statics(jit, fn)))
+            seen.add(fn)
+    return out
+
+
+def _loads_of(path: str, node: ast.AST) -> List[ast.AST]:
+    """Load-context occurrences of dotted ``path`` inside ``node`` (excluding
+    nested function bodies, where closure timing is out of scope)."""
+    hits = []
+
+    def visit(n: ast.AST):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(n, "ctx", None), ast.Load) \
+                and _dotted(n) == path:
+            hits.append(n)
+            return  # don't descend: base of a matching Attribute also matches prefixes
+        for c in ast.iter_child_nodes(n):
+            visit(c)
+
+    visit(node)
+    return hits
+
+
+def _stores_of(path: str, node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(n, "ctx", None), ast.Store) \
+                and _dotted(n) == path:
+            return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# RL101 — donation-after-use
+# ---------------------------------------------------------------------------
+
+
+def rule_rl101_donation_after_use(mod: ModuleUnderLint) -> List[Finding]:
+    """A buffer passed in a ``donate_argnums`` position is dead after the
+    call; reading it again (before rebinding) is use-after-donation."""
+    findings: List[Finding] = []
+
+    # 1. collect donating callees: dotted-path -> donated positions
+    donors: Dict[str, Tuple[int, ...]] = {}
+    defs = _module_functions(mod)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        jit = _jit_call(node.value)
+        if jit is None:
+            continue
+        nums = _int_tuple(_kw(jit, "donate_argnums") or ast.Constant(None))
+        if not nums:
+            continue
+        for tgt in node.targets:
+            path = _dotted(tgt)
+            if path:
+                donors[path] = nums
+    for fn in defs.values():
+        for dec in fn.decorator_list:
+            jit = _jit_call(dec) if isinstance(dec, ast.Call) else None
+            if jit is None:
+                continue
+            nums = _int_tuple(_kw(jit, "donate_argnums") or ast.Constant(None))
+            if nums:
+                donors[fn.name] = nums
+
+    if not donors:
+        return findings
+
+    # 2. at every call site, trace each donated arg path forward
+    for call in ast.walk(mod.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        callee = _dotted(call.func)
+        if callee not in donors:
+            continue
+        donated_paths = []
+        for pos in donors[callee]:
+            if pos < len(call.args):
+                path = _dotted(call.args[pos])
+                if path:
+                    donated_paths.append(path)
+        if not donated_paths:
+            continue
+
+        # locate the statement containing the call and its body list
+        stmt = call
+        while not isinstance(stmt, ast.stmt):
+            stmt = mod.parent_of(stmt)
+            if stmt is None:
+                break
+        if stmt is None:
+            continue
+        body_owner = mod.parent_of(stmt)
+        body: Optional[Sequence[ast.stmt]] = None
+        if body_owner is not None:
+            for field in ("body", "orelse", "finalbody"):
+                seq = getattr(body_owner, field, None)
+                if isinstance(seq, list) and stmt in seq:
+                    body = seq
+                    break
+        if body is None:
+            continue
+        idx = body.index(stmt)
+
+        for path in donated_paths:
+            if _stores_of(path, stmt):
+                continue  # result rebinds the donated buffer: canonical pattern
+            flagged = False
+            for nxt in body[idx + 1:]:
+                loads = _loads_of(path, nxt)
+                if loads:
+                    findings.append(Finding(
+                        "RL101", mod.path, loads[0].lineno,
+                        f"'{path}' was donated to '{callee}' at line "
+                        f"{call.lineno} (donate_argnums) and is read again "
+                        f"without being rebound"))
+                    flagged = True
+                    break
+                if _stores_of(path, nxt):
+                    break
+            else:
+                # body exhausted without a rebind
+                if flagged:
+                    continue
+                if isinstance(body_owner, (ast.For, ast.While)):
+                    # next loop iteration re-reads the dead buffer at the
+                    # call itself
+                    findings.append(Finding(
+                        "RL101", mod.path, call.lineno,
+                        f"'{path}' is donated to '{callee}' inside a loop "
+                        f"but never rebound before the next iteration"))
+                elif path.startswith("self."):
+                    # an object attribute outlives the method: leaving it
+                    # pointing at a donated buffer dangles for every later
+                    # method call
+                    findings.append(Finding(
+                        "RL101", mod.path, call.lineno,
+                        f"attribute '{path}' is donated to '{callee}' and "
+                        f"never rebound in this method — it keeps pointing "
+                        f"at the dead buffer"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL102 — jit-hygiene: non-static args in Python control flow
+# ---------------------------------------------------------------------------
+
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "sharding"}
+_STATIC_CALLS = {"len", "isinstance", "hasattr", "type"}
+
+
+def _concrete_uses(param: str, expr: ast.AST, mod: ModuleUnderLint
+                   ) -> List[ast.Name]:
+    """Occurrences of ``param`` in ``expr`` that would force concreteness,
+    skipping trace-safe accesses (``x.shape``/``x.ndim``/``len(x)``/
+    ``x is None``/``isinstance(x, ...)``)."""
+    hits = []
+    for n in ast.walk(expr):
+        if not (isinstance(n, ast.Name) and n.id == param
+                and isinstance(n.ctx, ast.Load)):
+            continue
+        parent = mod.parent_of(n)
+        if isinstance(parent, ast.Attribute) and parent.attr in _STATIC_ATTRS:
+            continue
+        if isinstance(parent, ast.Call) \
+                and _dotted(parent.func) in _STATIC_CALLS:
+            continue
+        if isinstance(parent, ast.Compare) \
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in parent.ops):
+            continue  # `x is None` default-arg dispatch is trace-safe
+        # inside a jnp/lax call the hazard is the branch-on-traced-value
+        # itself — RL103's finding, not a static_argnames fix
+        cur = parent
+        traced = False
+        while cur is not None and cur is not expr:
+            if _is_traced_call(cur):
+                traced = True
+                break
+            cur = mod.parent_of(cur)
+        if traced:
+            continue
+        hits.append(n)
+    return hits
+
+
+def rule_rl102_jit_hygiene(mod: ModuleUnderLint) -> List[Finding]:
+    """Non-static jit params steering Python ``if``/``while``/``range``
+    either leak tracers or recompile per value — either way the argument
+    belongs in ``static_argnames``."""
+    findings: List[Finding] = []
+    for fn, statics in _jitted_functions(mod):
+        params = {a.arg for a in fn.args.posonlyargs + fn.args.args
+                  + fn.args.kwonlyargs} - statics - {"self"}
+        if not params:
+            continue
+        for node in ast.walk(fn):
+            tests: List[ast.AST] = []
+            if isinstance(node, (ast.If, ast.While)):
+                tests.append(node.test)
+            elif isinstance(node, ast.IfExp):
+                tests.append(node.test)
+            elif isinstance(node, ast.Call) and _dotted(node.func) == "range":
+                tests.extend(node.args)
+            for test in tests:
+                for param in sorted(params):
+                    for hit in _concrete_uses(param, test, mod):
+                        kind = "range()" if isinstance(node, ast.Call) \
+                            else "Python branch"
+                        findings.append(Finding(
+                            "RL102", mod.path, hit.lineno,
+                            f"jit-wrapped '{fn.name}' uses arg '{param}' in "
+                            f"a {kind} but '{param}' is not in "
+                            f"static_argnames — recompile/tracer-leak "
+                            f"hazard"))
+                        break  # one finding per (test, param)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL103 — Python branch on a traced value
+# ---------------------------------------------------------------------------
+
+_TRACED_PREFIXES = ("jnp.", "jax.numpy.", "lax.", "jax.lax.", "pl.", "pltpu.")
+
+
+def _is_traced_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func) or ""
+    return name.startswith(_TRACED_PREFIXES)
+
+
+def rule_rl103_branch_on_traced(mod: ModuleUnderLint) -> List[Finding]:
+    """``if jnp.any(...):`` inside a jitted function raises a
+    TracerBoolConversionError at trace time (or silently freezes the branch
+    under ``interpret=True`` Pallas) — use ``jnp.where``/``lax.cond``."""
+    findings: List[Finding] = []
+    jitted = {id(fn) for fn, _ in _jitted_functions(mod)}
+    if not jitted:
+        return findings
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            continue
+        # only inside jit-wrapped functions (incl. nested defs within them)
+        cur = mod.parent_of(node)
+        inside = False
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(cur) in jitted:
+                inside = True
+                break
+            cur = mod.parent_of(cur)
+        if not inside:
+            continue
+        for sub in ast.walk(node.test):
+            if _is_traced_call(sub):
+                findings.append(Finding(
+                    "RL103", mod.path, node.test.lineno,
+                    f"Python branch on traced value "
+                    f"'{ast.unparse(sub)[:60]}' inside a jitted function — "
+                    f"use jnp.where/lax.cond/lax.select"))
+                break
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL104 — hidden nondeterminism / host clocks in jitted paths
+# ---------------------------------------------------------------------------
+
+_NP_GLOBAL_RNG = {"rand", "randn", "randint", "random", "random_sample",
+                  "choice", "permutation", "shuffle", "normal", "uniform",
+                  "standard_normal", "binomial", "poisson", "exponential",
+                  "beta", "gamma", "dirichlet"}
+_HOST_CLOCKS = {"time.time", "time.perf_counter", "time.monotonic",
+                "time.process_time"}
+
+
+def rule_rl104_unseeded_nondeterminism(mod: ModuleUnderLint) -> List[Finding]:
+    """Legacy ``np.random.*`` global-state draws are unseeded per-process
+    state (use ``np.random.default_rng(seed)`` or ``jax.random``); host
+    clocks inside jitted functions bake one timestamp into the trace."""
+    findings: List[Finding] = []
+    jitted = {id(fn) for fn, _ in _jitted_functions(mod)}
+
+    def in_jitted(node: ast.AST) -> bool:
+        cur = mod.parent_of(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(cur) in jitted:
+                return True
+            cur = mod.parent_of(cur)
+        return False
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func) or ""
+        if name.startswith(("np.random.", "numpy.random.")):
+            fn_name = name.split(".")[-1]
+            if fn_name in _NP_GLOBAL_RNG:
+                findings.append(Finding(
+                    "RL104", mod.path, node.lineno,
+                    f"'{name}' draws from numpy's unseeded global RNG — "
+                    f"use np.random.default_rng(seed) or jax.random"))
+        elif name in _HOST_CLOCKS and in_jitted(node):
+            findings.append(Finding(
+                "RL104", mod.path, node.lineno,
+                f"'{name}()' inside a jitted function is evaluated once at "
+                f"trace time, not per call"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RL105 — discarded .at[].set() result
+# ---------------------------------------------------------------------------
+
+_AT_METHODS = {"set", "add", "multiply", "divide", "min", "max", "power",
+               "mul", "get", "apply"}
+
+
+def rule_rl105_discarded_at_update(mod: ModuleUnderLint) -> List[Finding]:
+    """``x.at[i].set(v)`` as a bare statement builds and discards a copy —
+    jnp arrays are immutable, the update must be assigned."""
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Expr):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Attribute)
+                and call.func.attr in _AT_METHODS):
+            continue
+        sub = call.func.value
+        if isinstance(sub, ast.Subscript) \
+                and isinstance(sub.value, ast.Attribute) \
+                and sub.value.attr == "at":
+            findings.append(Finding(
+                "RL105", mod.path, node.lineno,
+                f"result of '.at[...].{call.func.attr}(...)' is discarded — "
+                f"jnp arrays are immutable; assign the returned copy"))
+    return findings
+
+
+AST_RULES = [
+    rule_rl101_donation_after_use,
+    rule_rl102_jit_hygiene,
+    rule_rl103_branch_on_traced,
+    rule_rl104_unseeded_nondeterminism,
+    rule_rl105_discarded_at_update,
+]
