@@ -14,9 +14,11 @@ Three panels on one shared greedy workload:
   first evicts a Byzantine replica, and the fraction of its votes that
   scored divergent (the graceful-degradation reaction time in tokens).
 
-Rows follow the orchestrator's ``name,value,derived`` convention; every
-``robustserve_*`` row is persisted to ``BENCH_robust_serve.json`` by
-benchmarks/run.py so successive PRs accumulate a robustness trajectory.
+Rows follow the orchestrator's ``name,value,unit,derived`` convention
+(units here: ``tok_s``, ``ratio``, ``frac``, ``steps`` — accuracies are no
+longer persisted as microseconds); every ``robustserve_*`` row is persisted
+to ``BENCH_robust_serve.json`` by benchmarks/run.py so successive PRs
+accumulate a robustness trajectory.
 """
 from __future__ import annotations
 
@@ -68,11 +70,11 @@ def run(full: bool = False, smoke: bool = False) -> list[str]:
     overhead = (voted.decode_tok_s / single.decode_tok_s
                 if single.decode_tok_s else 0.0)
     rows = [
-        f"robustserve_single_decode_tok_s,{single.decode_tok_s:.1f},"
+        f"robustserve_single_decode_tok_s,{single.decode_tok_s:.1f},tok_s,"
         f"decode_s={single.decode_s:.3f};steps={single.decode_steps}",
-        f"robustserve_honest_decode_tok_s,{voted.decode_tok_s:.1f},"
+        f"robustserve_honest_decode_tok_s,{voted.decode_tok_s:.1f},tok_s,"
         f"R={R};vote={voted.vote};token_identical=1",
-        f"robustserve_replication_tok_ratio,{overhead:.3f},"
+        f"robustserve_replication_tok_ratio,{overhead:.3f},ratio,"
         f"voted/single decode tok/s (fault-tolerance overhead, R={R})",
     ]
 
@@ -91,13 +93,13 @@ def run(full: bool = False, smoke: bool = False) -> list[str]:
         div = (faulty["divergent_tokens"] / faulty["tokens_voted"]
                if faulty["tokens_voted"] else 0.0)
         rows.append(
-            f"robustserve_{name}_accuracy,{acc:.4f},"
+            f"robustserve_{name}_accuracy,{acc:.4f},frac,"
             f"f=1/{R};decode_tok_s={rep.decode_tok_s:.1f};"
             f"divergent_frac={div:.2f}")
         if rep.first_quarantine_step is not None:
             rows.append(
                 f"robustserve_{name}_quarantine_tokens,"
-                f"{rep.first_quarantine_step},"
+                f"{rep.first_quarantine_step},steps,"
                 f"decode steps to first eviction;"
                 f"evictions={faulty['evictions']}")
     return rows

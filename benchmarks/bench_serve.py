@@ -15,7 +15,8 @@ Greedy outputs are asserted token-identical across ALL four engine×layout
 combinations before any number is reported — a perf/memory figure from
 diverging outputs would be meaningless.
 
-Rows follow the orchestrator's ``name,value,derived`` convention; every
+Rows follow the orchestrator's ``name,value,unit,derived`` convention
+(units here: ``tok_s``, ``ms``, ``frac``, ``ratio``, ``kb``); every
 ``serve_*`` row is also persisted to ``BENCH_serve.json`` by benchmarks/run.py
 so successive PRs accumulate a serving-perf trajectory.
 """
@@ -71,18 +72,18 @@ def run(full: bool = False, smoke: bool = False) -> list[str]:
     rows = []
     for tag, rep in (("static", s), ("continuous", c), ("paged", p)):
         rows += [
-            f"serve_{tag}_decode_tok_s,{rep.decode_tok_s:.1f},"
+            f"serve_{tag}_decode_tok_s,{rep.decode_tok_s:.1f},tok_s,"
             f"decode_s={rep.decode_s:.3f};steps={rep.decode_steps}",
-            f"serve_{tag}_prefill_tok_s,{rep.prefill_tok_s:.1f},"
+            f"serve_{tag}_prefill_tok_s,{rep.prefill_tok_s:.1f},tok_s,"
             f"prefill_s={rep.prefill_s:.3f};compile_s={rep.compile_s:.2f}",
-            f"serve_{tag}_latency_p50_ms,{rep.latency_p50_s * 1e3:.1f},"
+            f"serve_{tag}_latency_p50_ms,{rep.latency_p50_s * 1e3:.1f},ms,"
             f"p99_ms={rep.latency_p99_s * 1e3:.1f}",
-            f"serve_{tag}_occupancy,{rep.mean_occupancy:.3f},"
+            f"serve_{tag}_occupancy,{rep.mean_occupancy:.3f},frac,"
             f"slots={slots};requests={n_requests}",
         ]
     speedup = c.decode_tok_s / s.decode_tok_s if s.decode_tok_s else 0.0
     rows.append(
-        f"serve_speedup_decode,{speedup:.2f},"
+        f"serve_speedup_decode,{speedup:.2f},ratio,"
         f"continuous/static decode tok/s on skewed gen 4..{gen_max} "
         f"({n_requests} reqs, {slots} slots)")
 
@@ -93,14 +94,14 @@ def run(full: bool = False, smoke: bool = False) -> list[str]:
     assert paged_req <= dense_req, (paged_req, dense_req)
     ratio = p.decode_tok_s / c.decode_tok_s if c.decode_tok_s else 0.0
     rows += [
-        f"serve_dense_hbm_per_req_kb,{dense_req / 1024:.1f},"
+        f"serve_dense_hbm_per_req_kb,{dense_req / 1024:.1f},kb,"
         f"max_len={max_len} rows per global layer",
-        f"serve_paged_hbm_per_req_kb,{paged_req / 1024:.1f},"
+        f"serve_paged_hbm_per_req_kb,{paged_req / 1024:.1f},kb,"
         f"mean_pages={p.mean_pages_per_req:.2f};page_size={page_size};"
         f"saving={1.0 - paged_req / dense_req:.2f}",
-        f"serve_paged_page_occupancy,{p.mean_page_occupancy:.3f},"
+        f"serve_paged_page_occupancy,{p.mean_page_occupancy:.3f},frac,"
         f"pool={p.n_pages} pages",
-        f"serve_paged_vs_dense_tok_ratio,{ratio:.2f},"
+        f"serve_paged_vs_dense_tok_ratio,{ratio:.2f},ratio,"
         f"paged/dense continuous decode tok/s (1.0 = equal)",
     ]
     return rows

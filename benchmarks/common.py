@@ -76,5 +76,13 @@ def run_async_experiment(
             "final_loss": float(mtr["loss"])}
 
 
-def fmt_row(name: str, us: float, derived: str) -> str:
-    return f"{name},{us:.1f},{derived}"
+def fmt_row(name: str, value: float, derived: str, unit: str = "us") -> str:
+    """One orchestrator CSV row: ``name,value,unit,derived``.
+
+    ``unit`` says what the value column measures (``us`` for per-call/step
+    microseconds — the historical default — but also ``tok_s``, ``ms``,
+    ``frac``, ``ratio``, ``kb``, ``steps`` for the serving and robustness
+    panels whose headline numbers were never durations). benchmarks/run.py
+    parses the unit back out and persists it next to the value, keeping
+    ``us_per_call`` as a back-compat alias for ``us`` rows only."""
+    return f"{name},{value:.1f},{unit},{derived}"

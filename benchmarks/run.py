@@ -2,8 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only fig2,...]
 
-Prints ``name,us_per_call,derived`` CSV rows (stdout), mirroring the paper's
-experimental panels:
+Prints ``name,value,unit,derived`` CSV rows (stdout) — ``unit`` names what
+the value column measures (``us``, ``tok_s``, ``ms``, ``frac``, ``ratio``,
+``kb``, ``steps``) — mirroring the paper's experimental panels:
 
     fig2_*      Fig. 2/5  weighted vs non-weighted robust aggregators
     fig3_*      Fig. 3/6  ω-CTMA effect on base aggregators
@@ -43,6 +44,7 @@ from __future__ import annotations
 import argparse
 import inspect
 import json
+import re
 import sys
 import time
 from pathlib import Path
@@ -68,9 +70,28 @@ BENCH_ROBUST_SERVE_PATH = (Path(__file__).resolve().parents[1]
 BENCH_ROBUST_PATH = Path(__file__).resolve().parents[1] / "BENCH_robust.json"
 
 
+_UNIT_RE = re.compile(r"[A-Za-z][A-Za-z0-9_]*")
+
+
 def _parse_row(row: str) -> dict:
-    name, us, derived = row.split(",", 2)
-    return {"name": name, "us_per_call": float(us), "derived": derived}
+    """Parse a bench row into its persisted dict.
+
+    Canonical rows are 4-field ``name,value,unit,derived``; legacy 3-field
+    ``name,value,derived`` rows (pre-unit writers) are still accepted with
+    ``unit="us"``. The unit slot is only claimed when it looks like a bare
+    unit token — legacy ``derived`` text can itself contain commas, so the
+    discriminator is the field shape, not the comma count. ``us_per_call``
+    is kept as a back-compat alias, but only for rows whose value really is
+    microseconds — accuracy/ratio rows no longer masquerade as durations."""
+    name, value, rest = row.split(",", 2)
+    unit, sep, derived = rest.partition(",")
+    if not (sep and _UNIT_RE.fullmatch(unit)):
+        unit, derived = "us", rest
+    out = {"name": name, "value": float(value), "unit": unit,
+           "derived": derived}
+    if unit == "us":
+        out["us_per_call"] = out["value"]
+    return out
 
 
 def _persist(path: Path, prefixes: tuple, rows: list[str], tag: str) -> None:
@@ -128,7 +149,7 @@ def main() -> None:
     if args.smoke and not args.only:
         names = ["aggcost", "agghier"]
 
-    print("name,us_per_call,derived")
+    print("name,value,unit,derived")
     failures = 0
     all_rows: list[str] = []
     for name in names:

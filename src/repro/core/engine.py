@@ -197,7 +197,8 @@ def engine_step(cfg: EngineConfig, value_grad_fn: Callable, grad_fn: Callable,
                 state: EngineState, batch: Any, probs: Array, byz_mask: Array,
                 *, anchor: Optional[Pytree] = None,
                 weighted: Optional[Array] = None,
-                per_worker_batch: bool = False) -> tuple[EngineState, dict]:
+                per_worker_batch: bool = False,
+                collect_metrics: bool = False) -> tuple[EngineState, dict]:
     """ONE server iteration (Alg. 2 lines 4-10) as a pure, vmappable function.
 
     Traced per-scenario arguments (vmap these over a leading scenario axis):
@@ -216,7 +217,14 @@ def engine_step(cfg: EngineConfig, value_grad_fn: Callable, grad_fn: Callable,
     presence and ``per_worker_batch``. ``attack_fn(D, honest_mask, weights,
     own_update)`` defaults to :func:`repro.core.attacks.byzantine_vector`;
     ``repro.fleet.adaptive`` substitutes attackers that tune against
-    ``agg_fn`` here."""
+    ``agg_fn`` here.
+
+    ``collect_metrics`` (STATIC) additionally returns the ``engine.*``
+    telemetry pytree (repro.obs registry names: per-worker weight mass +
+    histogram, Byzantine mass seen by the rule, robust-aggregate vs
+    weighted-mean anchor distance) as shape-static extra metrics entries —
+    derived values only, so the trained trajectory is bit-identical either
+    way, and False (the default) lowers to the uninstrumented HLO."""
     opt = cfg.opt
     key, k_arrival = jax.random.split(state.key)
 
@@ -301,19 +309,37 @@ def engine_step(cfg: EngineConfig, value_grad_fn: Callable, grad_fn: Callable,
     )
     metrics = {"loss": loss, "worker": i, "is_byz": is_byz,
                "lambda_emp": new_state.t_byz / jnp.maximum(t_next, 1)}
+    if collect_metrics:
+        from repro.obs.metrics import MASS_EDGES, histogram
+        mass = S_agg / jnp.maximum(jnp.sum(S_agg), 1e-30)
+        # anchor: the weighted (non-robust) mean the rule is defending — the
+        # gap to d_hat is the correction the robust rule applied this step
+        mean = _tmap(lambda l: jnp.tensordot(mass, l, axes=1), D)
+        sq = sum(jnp.sum(jnp.square(dl - ml))
+                 for dl, ml in zip(jax.tree_util.tree_leaves(d_hat),
+                                   jax.tree_util.tree_leaves(mean)))
+        metrics.update({
+            "engine.weight_mass": mass,
+            "engine.weight_mass_hist": histogram(mass, MASS_EDGES),
+            "engine.byz_mass": jnp.sum(jnp.where(byz_mask, mass, 0.0)),
+            "engine.anchor_dist": jnp.sqrt(sq),
+        })
     return new_state, metrics
 
 
 def make_step_fn(cfg: EngineConfig, loss_fn: Callable, *,
                  agg_fn: Optional[Callable] = None,
                  attack_fn: Optional[Callable] = None,
-                 per_worker_batch: bool = False) -> Callable:
+                 per_worker_batch: bool = False,
+                 collect_metrics: bool = False) -> Callable:
     """Build ``step(state, batch, probs, byz_mask, weighted=None)`` — the
     pure Alg. 2 iteration ``repro.fleet`` vmaps over scenario batches.
 
     Scenarios sharing a compile signature (same cfg statics / spec / loss)
     share ONE jit of the returned callable; proj_radius is unsupported here
-    (the anchor is per-run state — use the sequential engine)."""
+    (the anchor is per-run state — use the sequential engine).
+    ``collect_metrics`` (static) threads the ``engine.*`` telemetry outputs
+    through — see :func:`engine_step`."""
     if cfg.opt.proj_radius is not None:
         raise ValueError("make_step_fn: proj_radius requires the per-run "
                          "anchor — drive engine_step directly or use "
@@ -331,7 +357,8 @@ def make_step_fn(cfg: EngineConfig, loss_fn: Callable, *,
              weighted: Optional[Array] = None):
         return engine_step(cfg, value_grad_fn, grad_fn, agg_fn, attack_fn,
                            state, batch, probs, byz_mask, weighted=weighted,
-                           per_worker_batch=per_worker_batch)
+                           per_worker_batch=per_worker_batch,
+                           collect_metrics=collect_metrics)
 
     return step
 
@@ -349,10 +376,14 @@ class AsyncByzantineEngine:
 
     def __init__(self, cfg: EngineConfig, loss_fn: Callable[[Pytree, Any], Array],
                  d_dim: Optional[int] = None,
-                 attack_fn: Optional[Callable] = None):
+                 attack_fn: Optional[Callable] = None,
+                 collect_metrics: bool = False):
         self.cfg = cfg.validate()
         self.loss_fn = loss_fn
         self.d_dim = d_dim
+        # STATIC obs flag, read at trace time: False (default) keeps the
+        # step's uninstrumented HLO, True adds the engine.* metric outputs.
+        self.collect_metrics = collect_metrics
         self.grad_fn = jax.grad(loss_fn)
         self.value_grad_fn = jax.value_and_grad(loss_fn)
         self.agg_fn = self._make_agg_fn(cfg)
@@ -392,18 +423,40 @@ class AsyncByzantineEngine:
                   else None)
         return engine_step(self.cfg, self.value_grad_fn, self.grad_fn,
                            self.agg_fn, self.attack_fn, state, batch,
-                           self.probs, self.byz_mask, anchor=anchor)
+                           self.probs, self.byz_mask, anchor=anchor,
+                           collect_metrics=self.collect_metrics)
 
     def step(self, state: EngineState, batch: Any) -> tuple[EngineState, dict]:
         return self._step(state, batch)
 
     def run(self, state: EngineState, batches, steps: int,
             eval_fn: Optional[Callable[[Pytree], dict]] = None,
-            eval_every: int = 0) -> tuple[EngineState, list]:
-        """Drive the loop; ``batches`` is an iterator of per-step minibatches."""
+            eval_every: int = 0, obs=None) -> tuple[EngineState, list]:
+        """Drive the loop; ``batches`` is an iterator of per-step minibatches.
+
+        ``obs`` (a :class:`repro.obs.RunObs`) streams the per-step telemetry:
+        loss / empirical-lambda every step, the arriving worker's staleness
+        (server iterations since its previous arrival — derived HOST-side
+        from the step's worker stream, so no extra state field changes the
+        donated pytree), and, when the engine was built with
+        ``collect_metrics=True``, the device-collected ``engine.*`` tree."""
         history = []
+        last_arrival: dict[int, int] = {}
         for k in range(steps):
             state, metrics = self.step(state, next(batches))
+            if obs is not None:
+                step_no = k + 1
+                worker = int(metrics["worker"])
+                obs.metric("engine.loss", metrics["loss"], step=step_no,
+                           worker=worker)
+                obs.metric("engine.lambda_emp", metrics["lambda_emp"],
+                           step=step_no)
+                obs.metric("engine.staleness",
+                           step_no - last_arrival.get(worker, step_no),
+                           step=step_no, worker=worker)
+                last_arrival[worker] = step_no
+                obs.metric_tree({n: v for n, v in metrics.items()
+                                 if n.startswith("engine.")}, step=step_no)
             if eval_every and (k + 1) % eval_every == 0:
                 rec = {"step": k + 1, "loss": float(metrics["loss"]),
                        "lambda_emp": float(metrics["lambda_emp"])}

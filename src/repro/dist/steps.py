@@ -418,10 +418,15 @@ def make_replicated_prefill_step(cfg: ModelConfig, max_len: int):
 
 def vote_logits_fn(cfg, byz: Tuple[int, ...], n_replicas: int,
                    vote: str = "cwmed", lam: float = 0.25,
-                   zeno_rho: float = 1e-3):
+                   zeno_rho: float = 1e-3, collect_metrics: bool = False):
     """Build ``(logits (R, S, V), weights (R,), key) -> (voted (S, V),
     scores (R, S))`` — attack injection, robust vote, Zeno++-style pre-vote
     scores, shared by the replicated decode and first-token paths.
+    ``collect_metrics`` (STATIC) appends a third output: the shape-static
+    ``serve.vote.*`` telemetry dict (disagreement mass + vote margin per
+    slot, repro.obs registry names) derived from the TRANSMITTED stack, so
+    an attacked replica's dissent is visible even after the robust vote
+    suppressed it.
 
     ``cfg`` is a :class:`repro.core.attacks.LogitAttackConfig`. The score of
     replica r on slot s is ``cos(l_rs, v_s) - rho·‖l_rs - v_s‖²/‖v_s‖²``
@@ -460,7 +465,20 @@ def vote_logits_fn(cfg, byz: Tuple[int, ...], n_replicas: int,
         dist2 = jnp.sum(jnp.square(lg - v[None]), -1)            # (R, S)
         scores = (inner / (lnorm * vnorm[None])
                   - zeno_rho * dist2 / jnp.square(vnorm)[None])
-        return voted, scores
+        if not collect_metrics:
+            return voted, scores
+        # vote telemetry (shape-static, derived-only): how much vote mass
+        # dissented from the voted argmax, and how decisive the vote was
+        mass = weights / jnp.maximum(jnp.sum(weights), 1e-30)      # (R,)
+        tok = jnp.argmax(voted, axis=-1)                           # (S,)
+        dissent = jnp.argmax(lv, axis=-1) != tok[None]             # (R, S)
+        top2 = jax.lax.top_k(voted, 2)[0]                          # (S, 2)
+        vmetrics = {
+            "serve.vote.disagree_mass": jnp.sum(
+                jnp.where(dissent, mass[:, None], 0.0), axis=0),   # (S,)
+            "serve.vote.margin": top2[:, 0] - top2[:, 1],          # (S,)
+        }
+        return voted, scores, vmetrics
 
     return run
 
@@ -470,7 +488,8 @@ def make_replicated_decode_step(cfg: ModelConfig, n_replicas: int,
                                 vote: str = "cwmed", lam: float = 0.25,
                                 zeno_rho: float = 1e-3,
                                 temperature: float = 0.0, top_k: int = 0,
-                                paged: bool = False):
+                                paged: bool = False,
+                                collect_metrics: bool = False):
     """step(params_stack, cache_stack, tokens, req_keys, gen_idx, weights,
     key[, page_table]) -> (next_tokens (S,), scores (R, S), cache_stack).
 
@@ -484,9 +503,15 @@ def make_replicated_decode_step(cfg: ModelConfig, n_replicas: int,
     recompile. ``scores`` are the Zeno++-style pre-vote scores the engine's
     quarantine policy consumes host-side. Every replica decodes the voted
     token regardless of its vote mass, which is what keeps a quarantined
-    replica's KV cache coherent for re-admission."""
+    replica's KV cache coherent for re-admission.
+
+    ``collect_metrics`` (STATIC) appends the ``serve.vote.*`` telemetry dict
+    of :func:`vote_logits_fn` as a 4th output — derived values only, so the
+    sampled token stream is identical either way and the default lowers to
+    the uninstrumented HLO."""
     run_vote = vote_logits_fn(attack, byz, n_replicas, vote=vote, lam=lam,
-                              zeno_rho=zeno_rho)
+                              zeno_rho=zeno_rho,
+                              collect_metrics=collect_metrics)
 
     def body(params, cache, tokens, req_keys, gen_idx, weights, key,
              page_table=None):
@@ -494,8 +519,10 @@ def make_replicated_decode_step(cfg: ModelConfig, n_replicas: int,
             return decode_step(p, cfg, c, tokens, page_table=page_table)
 
         logits, cache = jax.vmap(one)(params, cache)    # (R, S, 1, V)
-        voted, scores = run_vote(logits[:, :, 0, :], weights, key)
+        voted, scores, *vm = run_vote(logits[:, :, 0, :], weights, key)
         nxt = sample_next(voted, req_keys, gen_idx, temperature, top_k)
+        if collect_metrics:
+            return nxt, scores, cache, vm[0]
         return nxt, scores, cache
 
     if paged:

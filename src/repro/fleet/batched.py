@@ -58,7 +58,8 @@ class FleetGroup:
     Byzantine masses on the already-compiled step)."""
 
     def __init__(self, scenarios: List[Scenario],
-                 problem: Optional[Problem] = None):
+                 problem: Optional[Problem] = None,
+                 collect_metrics: bool = False):
         if not scenarios:
             raise ValueError("FleetGroup needs at least one scenario")
         sigs = {compile_signature(sc) for sc in scenarios}
@@ -74,8 +75,13 @@ class FleetGroup:
                                         dict(rep.attack_params))
         cfg = engine_config(rep)
         self._grad_fn = jax.grad(self.problem.loss_fn)
+        # collect_metrics is STATIC and part of the group's single compile:
+        # True adds the engine.* telemetry outputs to the vmapped step
+        # (still one compile per group), False lowers to today's HLO
+        self.collect_metrics = collect_metrics
         step = make_step_fn(cfg, self.problem.loss_fn, agg_fn=self.agg_fn,
-                            attack_fn=self.attack_fn, per_worker_batch=True)
+                            attack_fn=self.attack_fn, per_worker_batch=True,
+                            collect_metrics=collect_metrics)
         self._vstep = jax.jit(jax.vmap(step), donate_argnums=(0,))
 
     def init(self, scs: List[Scenario]) -> tuple[EngineState, list]:
@@ -92,14 +98,19 @@ class FleetGroup:
         return stack_engine_states(states), streams
 
     def run(self, scenarios: Optional[List[Scenario]] = None,
-            evaluate: bool = True) -> List[FleetResult]:
+            evaluate: bool = True, obs=None,
+            group: int = 0) -> List[FleetResult]:
         """Drive every scenario to ITS OWN step count (the group runs to the
         max and snapshots each scenario's row as it crosses its horizon).
 
         ``scenarios`` overrides the group's list WITHOUT recompiling — the
         replacements must share the group's compile signature (this is how
         the breakdown bisection sweeps Byzantine mass on one compiled step).
-        """
+
+        ``obs`` (a :class:`repro.obs.RunObs`) streams per-step per-scenario
+        loss vectors — and, when the group was built with
+        ``collect_metrics=True``, the device-collected ``engine.*`` telemetry
+        — labelled by ``group`` so a multi-group matrix stays separable."""
         scs = self.scenarios if scenarios is None else list(scenarios)
         sig = compile_signature(self.scenarios[0])
         bad = [sc.label for sc in scs if compile_signature(sc) != sig]
@@ -111,13 +122,23 @@ class FleetGroup:
         masks = jnp.stack([_scenario_statics(sc)[2] for sc in scs])
         weighted = jnp.asarray([sc.weighted for sc in scs])
         max_steps = max(sc.steps for sc in scs)
+        if obs is not None:
+            obs.event("fleet.group", group=group,
+                      scenarios=[sc.label for sc in scs])
 
         snapshots: Dict[int, EngineState] = {}
         t0 = time.perf_counter()
         for t in range(max_steps):
             batch = _tmap(lambda *ls: jnp.stack(ls),
                           *[next(s) for s in streams])
-            state, _ = self._vstep(state, batch, probs, masks, weighted)
+            state, metrics = self._vstep(state, batch, probs, masks, weighted)
+            if obs is not None:
+                obs.metric("fleet.loss", metrics["loss"], step=t + 1,
+                           group=group)
+                if self.collect_metrics:
+                    obs.metric_tree({n: v for n, v in metrics.items()
+                                     if n.startswith("engine.")},
+                                    step=t + 1, group=group)
             for i, sc in enumerate(scs):
                 if sc.steps == t + 1:
                     snapshots[i] = unstack_engine_state(state, i)
@@ -133,13 +154,17 @@ class FleetGroup:
         return out
 
 
-def run_scenarios(scenarios: List[Scenario]) -> List[FleetResult]:
+def run_scenarios(scenarios: List[Scenario], obs=None) -> List[FleetResult]:
     """THE fleet runner: group by compile signature, run each group behind
-    one jitted vmapped step, scatter results back to input order."""
+    one jitted vmapped step, scatter results back to input order. ``obs``
+    streams per-group loss trajectories (device telemetry too when its
+    ``device_metrics`` flag is set) through each group's run."""
+    collect = obs is not None and getattr(obs, "device_metrics", False)
     results: List[Optional[FleetResult]] = [None] * len(scenarios)
-    for _, idxs in group_scenarios(scenarios).items():
-        for idx, res in zip(idxs, FleetGroup([scenarios[i]
-                                              for i in idxs]).run()):
+    for gid, (_, idxs) in enumerate(group_scenarios(scenarios).items()):
+        group = FleetGroup([scenarios[i] for i in idxs],
+                           collect_metrics=collect)
+        for idx, res in zip(idxs, group.run(obs=obs, group=gid)):
             results[idx] = res
     return results  # type: ignore[return-value]
 

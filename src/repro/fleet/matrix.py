@@ -213,9 +213,10 @@ def matrix_scenarios(*, problem: str = "classifier",
 
 
 def matrix_rows(rows: List[dict]) -> List[str]:
-    """Benchmark-orchestrator CSV lines (``name,us_per_call,derived``) for a
-    matrix — the value column carries the standalone aggregator µs/call and
-    ``derived`` packs the robustness metrics, one ``robust_`` row per cell."""
+    """Benchmark-orchestrator CSV lines (``name,value,unit,derived``) for a
+    matrix — the value column carries the standalone aggregator µs/call
+    (``unit=us``) and ``derived`` packs the robustness metrics, one
+    ``robust_`` row per cell."""
     out = []
     for r in rows:
         derived = (f"loss={r['final_loss']:.4f}"
@@ -226,5 +227,5 @@ def matrix_rows(rows: List[dict]) -> List[str]:
         if "acc" in r:
             derived += f";acc={r['acc']:.4f}"
         us = r["agg_us_per_call"] or 0.0
-        out.append(f"robust_{r['cell']},{us:.1f},{derived}")
+        out.append(f"robust_{r['cell']},{us:.1f},us,{derived}")
     return out

@@ -53,6 +53,11 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default="", help="write structured rows here")
     ap.add_argument("--smoke", action="store_true",
                     help="quadratic family, short horizons")
+    ap.add_argument("--obs-dir", default="",
+                    help="write repro.obs telemetry here: "
+                         "<dir>/fleet.metrics.jsonl + <dir>/fleet.trace.json "
+                         "(per-scenario loss trajectories + engine.* device "
+                         "metrics; summarize with python -m repro.launch.obs)")
     args = ap.parse_args(argv)
 
     from repro.fleet import (breakdown_matrix, matrix_scenarios,
@@ -69,6 +74,11 @@ def main(argv=None) -> None:
     scenarios = matrix_scenarios(**kw)
     print(f"# {len(scenarios)} scenarios", file=sys.stderr)
 
+    obs = None
+    if args.obs_dir:
+        from repro.obs import RunObs
+        obs = RunObs.open(args.obs_dir, "fleet")
+
     if args.breakdown:
         rows = breakdown_matrix(scenarios,
                                 bisect_steps=args.bisect_steps or None)
@@ -79,7 +89,7 @@ def main(argv=None) -> None:
                   f"breakdown={r['breakdown_count']}/{r['m']} "
                   f"agg_us={r['agg_us_per_call']:.1f}")
     else:
-        results = run_scenarios(scenarios)
+        results = run_scenarios(scenarios, obs=obs)
         rows = []
         for res in results:
             ev = {k: float(v) for k, v in res.eval.items()}
@@ -93,6 +103,10 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
         print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+    if obs is not None:
+        obs.close()
+        print(f"# obs: wrote {args.obs_dir}/fleet.metrics.jsonl + "
+              f"fleet.trace.json", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,72 @@
+"""Obs CLI: validate and summarize an observed run's artifacts.
+
+    # render a summary of a run's metrics (+ optional trace)
+    PYTHONPATH=src python -m repro.launch.obs --metrics obs/serve.metrics.jsonl \
+        --trace obs/serve.trace.json
+    PYTHONPATH=src python -m repro.launch.obs --metrics ... --format md
+
+    # CI schema gate: exit 1 if any artifact fails validation
+    PYTHONPATH=src python -m repro.launch.obs --validate \
+        --metrics obs/serve.metrics.jsonl --trace obs/serve.trace.json
+
+``--metrics`` takes the JSONL a :class:`repro.obs.MetricSink` wrote;
+``--trace`` the Chrome-trace JSON a :class:`repro.obs.Tracer` exported
+(load it at https://ui.perfetto.dev). ``--validate`` checks the metrics
+rows against the registry schema and the trace against the trace-event
+shape instead of printing the summary. Produce the artifacts by passing
+``--obs-dir`` to ``repro.launch.serve`` / ``repro.launch.fleet``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--metrics", default="",
+                    help="metrics JSONL written by a MetricSink")
+    ap.add_argument("--trace", default="",
+                    help="Chrome-trace JSON exported by a Tracer")
+    ap.add_argument("--format", default="text", choices=("text", "md"),
+                    dest="fmt", help="summary output format")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check the artifacts instead of summarizing; "
+                         "exit 1 on any error")
+    args = ap.parse_args(argv)
+    if not args.metrics and not args.trace:
+        ap.error("need --metrics and/or --trace")
+
+    from repro.obs import summarize_files, validate_jsonl, validate_trace
+
+    if args.validate:
+        errors = []
+        if args.metrics:
+            errors += validate_jsonl(args.metrics)
+        if args.trace:
+            errors += validate_trace(args.trace)
+        for e in errors:
+            print(f"ERROR: {e}", file=sys.stderr)
+        checked = " + ".join(p for p in (args.metrics, args.trace) if p)
+        if errors:
+            print(f"{checked}: {len(errors)} schema error(s)",
+                  file=sys.stderr)
+            return 1
+        print(f"{checked}: OK")
+        return 0
+
+    if args.metrics:
+        print(summarize_files(args.metrics, args.trace or None,
+                              fmt=args.fmt), end="")
+    else:
+        import json
+
+        from repro.obs import render_summary
+        doc = json.loads(open(args.trace).read())
+        print(render_summary([], doc, fmt=args.fmt, title=args.trace),
+              end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

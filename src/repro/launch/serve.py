@@ -102,6 +102,14 @@ def main(argv=None) -> dict:
                     help="comma-separated replica ids that stop responding")
     ap.add_argument("--hang", default="",
                     help="comma-separated replica ids that intermittently stall")
+    ap.add_argument("--obs-dir", default="",
+                    help="write repro.obs telemetry here: "
+                         "<dir>/serve.metrics.jsonl + <dir>/serve.trace.json "
+                         "(Perfetto-loadable; summarize with "
+                         "python -m repro.launch.obs)")
+    ap.add_argument("--no-device-metrics", action="store_true",
+                    help="with --obs-dir: host-side spans/rows only, keep "
+                         "the jitted steps' uninstrumented HLO")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -134,14 +142,20 @@ def main(argv=None) -> dict:
             byz=_csv_ints(args.byz_replicas), lags=_csv_ints(args.lags),
             dead=_csv_ints(args.dead), hang=_csv_ints(args.hang),
             attack_seed=args.seed)
+    obs = None
+    if args.obs_dir:
+        from repro.obs import RunObs
+        obs = RunObs.open(args.obs_dir, "serve",
+                          device_metrics=not args.no_device_metrics)
     reports = {}
     for name in engines:
         reqs = [copy.deepcopy(r) for r in workload]
         if rcfg is not None:
             rep = ReplicatedServeEngine(cfg, params, scfg, rcfg,
-                                        engine=name).run(reqs)
+                                        engine=name, obs=obs).run(reqs)
         else:
-            rep = ServeEngine(cfg, params, scfg, engine=name).run(reqs)
+            rep = ServeEngine(cfg, params, scfg, engine=name,
+                              obs=obs).run(reqs)
         _log_report(rep)
         if rcfg is not None:
             for h in rep.replicas:
@@ -161,6 +175,11 @@ def main(argv=None) -> dict:
         if s.decode_tok_s > 0:
             logger.info("continuous/static decode speedup: %.2fx",
                         c.decode_tok_s / s.decode_tok_s)
+
+    if obs is not None:
+        obs.close()
+        logger.info("obs: wrote %s/serve.metrics.jsonl + serve.trace.json",
+                    args.obs_dir)
 
     rep = reports[engines[0]]
     return {"reports": {k: v.as_dict() for k, v in reports.items()},

@@ -1,0 +1,136 @@
+"""repro.obs — jit-safe telemetry, structured tracing, run reports.
+
+Three pieces (see obs/README.md for the metric catalog + trace schema):
+
+- :mod:`metrics` — a typed metric registry (counter / gauge / histogram
+  with static bucket edges), jit-safe collection helpers (instrumented
+  steps return a shape-static metrics pytree next to their outputs), and a
+  host-side :class:`~repro.obs.metrics.MetricSink` streaming validated rows
+  to JSONL.
+- :mod:`trace` — a host-side span :class:`~repro.obs.trace.Tracer`
+  (admission → prefill → insert → decode per request, step / warmup /
+  eviction events, XLA compiles folded in via the ``lint_runtime`` event
+  names) with Chrome-trace / Perfetto JSON export.
+- :mod:`report` — render a run's JSONL (+ optional trace) into a
+  text/markdown summary: histograms, quarantine timeline, per-replica
+  health. CLI: ``python -m repro.launch.obs``.
+
+:class:`RunObs` bundles one sink + one tracer behind the single optional
+``obs=`` handle every instrumented layer takes (``core.engine`` run loops,
+``serve.engine`` / ``serve.replicated``, ``fleet.batched``, the serve
+benchmarks). ``obs=None`` — the default everywhere — is the zero-cost-off
+path: no sink, no tracer, and the jitted steps lower to the uninstrumented
+HLO because the ``collect_metrics`` flags they key on stay statically
+False.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager, nullcontext
+from pathlib import Path
+from typing import Any, Dict, Iterator, Optional, Union
+
+from repro.obs.metrics import (EVENTS, MASS_EDGES, REGISTRY, EventSpec,
+                               MetricSink, MetricSpec, histogram, load_jsonl,
+                               register, register_event, validate_jsonl,
+                               validate_rows)
+from repro.obs.report import render_summary, summarize_files
+from repro.obs.trace import Tracer, validate_trace
+
+__all__ = [
+    "EVENTS", "EventSpec", "MASS_EDGES", "MetricSink", "MetricSpec",
+    "REGISTRY", "RunObs", "Tracer", "histogram", "load_jsonl", "register",
+    "register_event", "render_summary", "summarize_files", "validate_jsonl",
+    "validate_rows", "validate_trace",
+]
+
+
+class RunObs:
+    """One observed run: a :class:`MetricSink` and/or a :class:`Tracer`.
+
+    Either half may be absent — every method no-ops against a missing half,
+    so instrumentation sites stay a single unconditional call once they have
+    a non-None handle. ``device_metrics`` is the STATIC enabled flag the
+    engines consult when building their jitted steps: True compiles the
+    metric-collecting step variants (same compile count, extra shape-static
+    outputs), False keeps the uninstrumented HLO even while host-side
+    rows/spans are still recorded."""
+
+    def __init__(self, sink: Optional[MetricSink] = None,
+                 tracer: Optional[Tracer] = None,
+                 device_metrics: bool = True):
+        self.sink = sink
+        self.tracer = tracer
+        self.device_metrics = device_metrics
+
+    @classmethod
+    def open(cls, directory: Union[str, Path], prefix: str,
+             device_metrics: bool = True,
+             compile_events: bool = True) -> "RunObs":
+        """Sink + tracer writing ``<dir>/<prefix>.metrics.jsonl`` and
+        ``<dir>/<prefix>.trace.json``; XLA compile events attached."""
+        d = Path(directory)
+        obs = cls(sink=MetricSink(d / f"{prefix}.metrics.jsonl"),
+                  tracer=Tracer(d / f"{prefix}.trace.json"),
+                  device_metrics=device_metrics)
+        if compile_events:
+            obs.tracer.attach_compile_events()
+        return obs
+
+    # -- metrics -----------------------------------------------------------
+
+    def metric(self, name: str, value: Any, step: Optional[int] = None,
+               **labels: Any) -> None:
+        if self.sink is not None:
+            self.sink.log(name, value, step=step, **labels)
+
+    def metric_tree(self, tree: Dict[str, Any], step: Optional[int] = None,
+                    **labels: Any) -> None:
+        if self.sink is not None:
+            self.sink.log_tree(tree, step=step, **labels)
+
+    def event(self, name: str, step: Optional[int] = None,
+              **fields: Any) -> None:
+        """Structured event: a JSONL row AND an instant on the timeline."""
+        if self.sink is not None:
+            self.sink.event(name, step=step, **fields)
+        if self.tracer is not None:
+            self.tracer.instant(name, cat="event", step=step, **fields)
+
+    # -- timeline ----------------------------------------------------------
+
+    def span(self, name: str, **args: Any):
+        if self.tracer is None:
+            return nullcontext()
+        return self.tracer.span(name, **args)
+
+    def counter(self, name: str, **values: float) -> None:
+        if self.tracer is not None:
+            self.tracer.counter(name, **values)
+
+    def request_begin(self, uid: int, **args: Any) -> None:
+        if self.tracer is not None:
+            self.tracer.begin_async("request", uid, **args)
+
+    def request_end(self, uid: int, **args: Any) -> None:
+        if self.tracer is not None:
+            self.tracer.end_async("request", uid, **args)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        if self.sink is not None:
+            self.sink.close()
+        if self.tracer is not None:
+            self.tracer.close()
+
+
+@contextmanager
+def observed_run(directory: Union[str, Path], prefix: str,
+                 device_metrics: bool = True) -> Iterator[RunObs]:
+    """``with observed_run("obs_out", "serve") as obs: ...`` — opens sink +
+    tracer, guarantees flush/export on exit."""
+    obs = RunObs.open(directory, prefix, device_metrics=device_metrics)
+    try:
+        yield obs
+    finally:
+        obs.close()

@@ -1,0 +1,365 @@
+"""Typed metric registry + jit-safe collection + host-side JSONL sink.
+
+The registry is the single source of truth for every telemetry name the
+repo emits: a metric is declared ONCE (``register``) with a kind
+(``counter`` / ``gauge`` / ``histogram``), a unit and a description, and the
+obs README's catalog is lint-gated against it (RD203 in
+``tools/lint/docs_rules.py``) so the docs can never silently drift from the
+code. Structured events (quarantine transitions, request lifecycle) live in
+a parallel ``register_event`` catalog.
+
+Jit-side collection is SHAPE-STATIC by construction: instrumented steps
+return a metrics pytree (scalars / fixed-size vectors / fixed-bucket
+histogram counts) alongside their existing outputs — no ``io_callback``, no
+host round-trips inside jit. :func:`histogram` bucketizes against STATIC
+edges (a Python tuple baked into the trace), so an enabled run compiles
+exactly once per step like a disabled one; a disabled run (the default)
+omits the extra outputs entirely and lowers to the uninstrumented HLO.
+
+Host-side, a :class:`MetricSink` validates each row against the registry
+and appends it to JSONL — one JSON object per line, ``{"metric": name,
+"kind": ..., "unit": ..., "step": ..., "value": ...}`` for samples and
+``{"event": name, "step": ..., **fields}`` for events.
+:func:`validate_jsonl` re-checks a file against the same schema (the CI obs
+smoke gate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+KINDS = ("counter", "gauge", "histogram")
+
+# static bucket edges for weight-mass histograms: masses are fractions in
+# [0, 1]; the log-ish spacing resolves both the starved tail and the
+# dominant-worker head of a skewed arrival distribution
+MASS_EDGES: Tuple[float, ...] = (0.01, 0.02, 0.05, 0.1, 0.2, 0.4, 0.8)
+
+# decode-step / prefill-call wall-time edges (seconds)
+TIME_EDGES: Tuple[float, ...] = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One registered metric: its kind decides how rows are validated and
+    rendered (counters accumulate, gauges sample, histograms carry
+    per-bucket counts against ``bucket_edges``)."""
+    name: str
+    kind: str                       # counter | gauge | histogram
+    unit: str = ""
+    desc: str = ""
+    bucket_edges: Tuple[float, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class EventSpec:
+    """One registered structured-event name."""
+    name: str
+    desc: str = ""
+
+
+REGISTRY: Dict[str, MetricSpec] = {}
+EVENTS: Dict[str, EventSpec] = {}
+
+
+def register(name: str, kind: str, unit: str = "", desc: str = "",
+             bucket_edges: Sequence[float] = ()) -> MetricSpec:
+    """Declare a metric. Re-registration must be identical (idempotent
+    imports); a conflicting redeclaration is a programming error."""
+    if kind not in KINDS:
+        raise ValueError(f"metric {name!r}: unknown kind {kind!r} "
+                         f"(choose from {KINDS})")
+    if kind == "histogram" and not bucket_edges:
+        raise ValueError(f"histogram metric {name!r} needs static "
+                         f"bucket_edges")
+    spec = MetricSpec(name, kind, unit, desc, tuple(bucket_edges))
+    prev = REGISTRY.get(name)
+    if prev is not None and prev != spec:
+        raise ValueError(f"metric {name!r} re-registered with a different "
+                         f"spec: {prev} vs {spec}")
+    REGISTRY[name] = spec
+    return spec
+
+
+def register_event(name: str, desc: str = "") -> EventSpec:
+    spec = EventSpec(name, desc)
+    prev = EVENTS.get(name)
+    if prev is not None and prev != spec:
+        raise ValueError(f"event {name!r} re-registered with a different "
+                         f"description")
+    EVENTS[name] = spec
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# jit-safe collection
+# ---------------------------------------------------------------------------
+
+def histogram(values: Array, edges: Sequence[float],
+              weights: Optional[Array] = None) -> Array:
+    """Shape-static bucket counts of ``values`` against STATIC ``edges``.
+
+    Returns ``(len(edges) + 1,)`` counts — bucket ``i`` holds values in
+    ``[edges[i-1], edges[i])`` with the open tails at both ends. ``edges``
+    must be a Python sequence (baked into the trace); ``weights`` optionally
+    accumulates per-value mass instead of counts. Safe to call inside jit:
+    no data-dependent shapes, no host sync."""
+    e = jnp.asarray(tuple(edges), jnp.float32)
+    v = jnp.ravel(values).astype(jnp.float32)
+    idx = jnp.searchsorted(e, v, side="right")
+    w = (jnp.ones_like(v) if weights is None
+         else jnp.ravel(weights).astype(jnp.float32))
+    return jnp.zeros((len(tuple(edges)) + 1,), jnp.float32).at[idx].add(w)
+
+
+def bucketize(values: Sequence[float],
+              edges: Sequence[float]) -> List[float]:
+    """HOST-side counterpart of :func:`histogram` (same bucket semantics:
+    ``len(edges) + 1`` counts, half-open ``[lo, hi)`` buckets with open
+    tails) for wall-clock samples collected outside jit."""
+    edges = list(edges)
+    counts = np.histogram(np.asarray(list(values), np.float64),
+                          bins=[-np.inf] + edges + [np.inf])[0]
+    return [float(c) for c in counts]
+
+
+# ---------------------------------------------------------------------------
+# host-side sink
+# ---------------------------------------------------------------------------
+
+def _to_py(value: Any):
+    """Device/NumPy values -> JSON-serializable Python (scalars or nested
+    lists). The single host sync point of the metrics path."""
+    if isinstance(value, (int, float, str, bool)) or value is None:
+        return value
+    arr = np.asarray(value)
+    if arr.ndim == 0:
+        return arr.item()
+    return arr.tolist()
+
+
+class MetricSink:
+    """Accumulates metric rows / events and streams them to JSONL.
+
+    ``path=None`` keeps rows in memory only (tests). Every ``log`` is
+    validated against the registry — an unregistered name raises, which is
+    what keeps the README catalog (lint-gated against the registry)
+    equivalent to the data actually on disk."""
+
+    def __init__(self, path: Optional[Union[str, Path]] = None):
+        self.path = Path(path) if path is not None else None
+        self.rows: List[dict] = []
+        self._fh = None
+        if self.path is not None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = self.path.open("w")
+
+    def _write(self, row: dict) -> None:
+        self.rows.append(row)
+        if self._fh is not None:
+            self._fh.write(json.dumps(row) + "\n")
+
+    def log(self, name: str, value: Any, step: Optional[int] = None,
+            **labels: Any) -> None:
+        spec = REGISTRY.get(name)
+        if spec is None:
+            raise KeyError(f"metric {name!r} is not registered — declare it "
+                           f"in repro.obs.metrics (and the obs README "
+                           f"catalog)")
+        row = {"metric": name, "kind": spec.kind, "unit": spec.unit,
+               "step": int(step) if step is not None else None,
+               "value": _to_py(value)}
+        for k, v in labels.items():
+            row[k] = _to_py(v)
+        self._write(row)
+
+    def log_tree(self, tree: Dict[str, Any], step: Optional[int] = None,
+                 **labels: Any) -> None:
+        """Log every ``{registered-name: value}`` entry of a metrics pytree
+        returned by an instrumented jitted step."""
+        for name, value in tree.items():
+            self.log(name, value, step=step, **labels)
+
+    def event(self, name: str, step: Optional[int] = None,
+              **fields: Any) -> None:
+        if name not in EVENTS:
+            raise KeyError(f"event {name!r} is not registered — declare it "
+                           f"in repro.obs.metrics (and the obs README "
+                           f"catalog)")
+        row = {"event": name,
+               "step": int(step) if step is not None else None}
+        for k, v in fields.items():
+            row[k] = _to_py(v)
+        self._write(row)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+# ---------------------------------------------------------------------------
+# schema validation (the CI obs smoke gate)
+# ---------------------------------------------------------------------------
+
+def _is_number(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def _numeric(value) -> bool:
+    if _is_number(value):
+        return True
+    if isinstance(value, list):
+        return all(_numeric(v) for v in value)
+    return False
+
+
+def validate_rows(rows: List[dict]) -> List[str]:
+    """Schema-check parsed JSONL rows; returns human-readable errors
+    (empty = valid). Every row must be a metric sample of a registered
+    metric with a numeric value (histograms: a count vector whose trailing
+    dim is ``len(edges) + 1``) or a registered event."""
+    errors = []
+    for i, row in enumerate(rows):
+        where = f"row {i + 1}"
+        if not isinstance(row, dict):
+            errors.append(f"{where}: not a JSON object")
+            continue
+        is_metric, is_event = "metric" in row, "event" in row
+        if is_metric == is_event:
+            errors.append(f"{where}: needs exactly one of 'metric'/'event'")
+            continue
+        step = row.get("step")
+        if step is not None and not isinstance(step, int):
+            errors.append(f"{where}: non-integer step {step!r}")
+        if is_event:
+            if row["event"] not in EVENTS:
+                errors.append(f"{where}: unregistered event {row['event']!r}")
+            continue
+        spec = REGISTRY.get(row["metric"])
+        if spec is None:
+            errors.append(f"{where}: unregistered metric {row['metric']!r}")
+            continue
+        if row.get("kind") != spec.kind or row.get("unit") != spec.unit:
+            errors.append(f"{where}: {row['metric']}: kind/unit mismatch vs "
+                          f"registry ({row.get('kind')!r}/{row.get('unit')!r}"
+                          f" != {spec.kind!r}/{spec.unit!r})")
+        value = row.get("value")
+        if not _numeric(value):
+            errors.append(f"{where}: {row['metric']}: non-numeric value")
+        elif spec.kind == "histogram":
+            v = value if isinstance(value, list) else [value]
+            inner = v
+            while inner and isinstance(inner[0], list):
+                inner = inner[0]
+            if len(inner) != len(spec.bucket_edges) + 1:
+                errors.append(
+                    f"{where}: {row['metric']}: histogram has {len(inner)} "
+                    f"buckets, registry edges imply "
+                    f"{len(spec.bucket_edges) + 1}")
+    return errors
+
+
+def load_jsonl(path: Union[str, Path]) -> List[dict]:
+    rows = []
+    for ln, line in enumerate(Path(path).read_text().splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            rows.append(json.loads(line))
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path}:{ln}: invalid JSON ({e.msg})") from e
+    return rows
+
+
+def validate_jsonl(path: Union[str, Path]) -> List[str]:
+    """Parse + schema-check a metrics JSONL file; returns errors."""
+    try:
+        rows = load_jsonl(path)
+    except ValueError as e:
+        return [str(e)]
+    return validate_rows(rows)
+
+
+# ---------------------------------------------------------------------------
+# THE metric catalog — every name the instrumented layers emit. The obs
+# README's tables are lint-gated against these declarations (RD203).
+# ---------------------------------------------------------------------------
+
+# core async engine (Alg. 2) — repro.core.engine with collect_metrics=True
+register("engine.loss", "gauge", unit="nats",
+         desc="arriving worker's minibatch loss at its query point")
+register("engine.lambda_emp", "gauge", unit="frac",
+         desc="empirical Byzantine-update fraction so far (Eq. 6 lambda)")
+register("engine.staleness", "gauge", unit="steps",
+         desc="server iterations since the arriving worker's previous "
+              "arrival (host-derived from the worker stream)")
+register("engine.weight_mass", "gauge", unit="frac",
+         desc="(m,) normalized aggregation-weight mass per worker")
+register("engine.weight_mass_hist", "histogram", unit="workers",
+         desc="per-worker weight-mass distribution", bucket_edges=MASS_EDGES)
+register("engine.byz_mass", "gauge", unit="frac",
+         desc="weight mass the robust rule sees on Byzantine rows")
+register("engine.anchor_dist", "gauge", unit="l2",
+         desc="global L2 distance between the robust aggregate and the "
+              "weighted mean of the momentum buffer")
+
+# fleet runner — repro.fleet.batched
+register("fleet.loss", "gauge", unit="nats",
+         desc="per-scenario step loss (one vector row per fleet step)")
+
+# serve engines — repro.serve.engine / repro.serve.replicated
+register("serve.queue_depth", "gauge", unit="requests",
+         desc="requests waiting in the admission scheduler")
+register("serve.slot_occupancy", "gauge", unit="frac",
+         desc="useful (non-retired) slot rows this decode step / n_slots")
+register("serve.page_occupancy", "gauge", unit="frac",
+         desc="physical KV pages in use / pool size (paged cache only)")
+register("serve.prefill_s", "gauge", unit="s",
+         desc="wall seconds of one prefill+insert+first-token call",
+         )
+register("serve.prefill_s_hist", "histogram", unit="calls",
+         desc="prefill call wall-time distribution", bucket_edges=TIME_EDGES)
+register("serve.decode_s", "gauge", unit="s",
+         desc="wall seconds of one decode step over all slots")
+register("serve.decode_s_hist", "histogram", unit="steps",
+         desc="decode step wall-time distribution", bucket_edges=TIME_EDGES)
+register("serve.prefill_tokens", "counter", unit="tokens",
+         desc="prompt tokens prefilled (cumulative)")
+register("serve.gen_tokens", "counter", unit="tokens",
+         desc="tokens generated (cumulative)")
+
+# replicated voting — repro.serve.replicated / dist.steps replicated decode
+register("serve.replica.vote_mass", "gauge", unit="mass",
+         desc="(R,) per-replica vote mass entering this step's vote "
+              "(staleness x availability x quarantine)")
+register("serve.replica.score", "gauge", unit="score",
+         desc="(R,) per-replica Zeno++-style pre-vote score, median over "
+              "active slots")
+register("serve.vote.disagree_mass", "gauge", unit="frac",
+         desc="(S,) fraction of vote mass whose replica argmax disagrees "
+              "with the voted token (device-collected)")
+register("serve.vote.margin", "gauge", unit="logit",
+         desc="(S,) top1-top2 margin of the voted logits "
+              "(device-collected)")
+
+# structured events
+register_event("serve.request.admit",
+               desc="request admitted to a slot (uid, slot, prompt_len)")
+register_event("serve.request.finish",
+               desc="request finished (uid, slot, gen_tokens, eos)")
+register_event("serve.quarantine.evict",
+               desc="replica evicted from the vote: step, replica, score at "
+                    "eviction, backoff, active request uids")
+register_event("serve.quarantine.readmit",
+               desc="replica re-admitted after backoff: step, replica, "
+                    "evictions so far")
+register_event("fleet.group",
+               desc="one fleet compile group: group id, scenario labels")

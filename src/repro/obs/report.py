@@ -1,0 +1,290 @@
+"""Render an observed run's metrics JSONL (+ optional trace) as text/markdown.
+
+This is the "what happened" half of repro.obs: ``render_summary`` takes the
+parsed rows a :class:`~repro.obs.metrics.MetricSink` wrote and produces the
+summary a human reads after a run — per-metric stats, ASCII histograms
+against the registry's static bucket edges, the quarantine timeline
+(evict → backoff → readmit with scores and displaced request uids),
+per-replica health (vote mass + score trajectories), and per-scenario fleet
+loss first→last. ``python -m repro.launch.obs`` is the CLI wrapper.
+
+Scalars and vectors share one path: a vector-valued gauge row (e.g. the
+``(R,)`` per-replica vote mass) contributes each of its components, keyed by
+index, so "per-replica health" is just a pivot of the same rows.
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.obs.metrics import REGISTRY, load_jsonl
+
+_BAR = "#"
+_BAR_WIDTH = 30
+
+
+def _flatten(value) -> List[float]:
+    if isinstance(value, list):
+        out: List[float] = []
+        for v in value:
+            out.extend(_flatten(v))
+        return out
+    return [float(value)]
+
+
+def _fmt(x: float) -> str:
+    if x != x:  # NaN
+        return "nan"
+    if x == int(x) and abs(x) < 1e6:
+        return str(int(x))
+    return f"{x:.4g}"
+
+
+def _bucket_labels(edges: Sequence[float]) -> List[str]:
+    labels = [f"< {_fmt(edges[0])}"]
+    labels += [f"[{_fmt(lo)}, {_fmt(hi)})"
+               for lo, hi in zip(edges[:-1], edges[1:])]
+    labels.append(f">= {_fmt(edges[-1])}")
+    return labels
+
+
+def _ascii_hist(counts: Sequence[float], edges: Sequence[float],
+                indent: str = "    ") -> List[str]:
+    peak = max(counts) if counts and max(counts) > 0 else 1.0
+    labels = _bucket_labels(edges)
+    width = max(len(l) for l in labels)
+    lines = []
+    for label, c in zip(labels, counts):
+        bar = _BAR * int(round(_BAR_WIDTH * c / peak))
+        lines.append(f"{indent}{label:>{width}} | {bar} {_fmt(c)}")
+    return lines
+
+
+def _stats(values: List[float]) -> Dict[str, float]:
+    n = len(values)
+    mean = sum(values) / n
+    return {"n": n, "min": min(values), "max": max(values), "mean": mean,
+            "last": values[-1]}
+
+
+# ---------------------------------------------------------------------------
+# section renderers — each returns a list of lines (possibly empty)
+# ---------------------------------------------------------------------------
+
+def _metric_table(rows: List[dict], md: bool) -> List[str]:
+    by_name: Dict[str, List[dict]] = defaultdict(list)
+    for row in rows:
+        if "metric" in row:
+            by_name[row["metric"]].append(row)
+    if not by_name:
+        return []
+    lines = ["## Metrics" if md else "Metrics", ""]
+    if md:
+        lines += ["| metric | kind | unit | rows | min | mean | max | last |",
+                  "|---|---|---|---:|---:|---:|---:|---:|"]
+    hist_sections: List[str] = []
+    for name in sorted(by_name):
+        mrows = by_name[name]
+        spec = REGISTRY.get(name)
+        kind = spec.kind if spec else mrows[-1].get("kind", "?")
+        unit = spec.unit if spec else mrows[-1].get("unit", "")
+        if kind == "histogram" and spec is not None:
+            total = [0.0] * (len(spec.bucket_edges) + 1)
+            for row in mrows:
+                flat = _flatten(row["value"])
+                # vector of histograms (e.g. vmapped fleet): fold buckets
+                for i, v in enumerate(flat):
+                    total[i % len(total)] += v
+            hist_sections.append("")
+            hist_sections.append(f"{'**' if md else ''}{name}{'**' if md else ''}"
+                                 f" ({unit}, {len(mrows)} rows)")
+            if md:
+                hist_sections.append("```")
+            hist_sections.extend(_ascii_hist(total, spec.bucket_edges))
+            if md:
+                hist_sections.append("```")
+            continue
+        values = [v for row in mrows for v in _flatten(row["value"])]
+        s = _stats(values)
+        if md:
+            lines.append(f"| `{name}` | {kind} | {unit} | {s['n']} | "
+                         f"{_fmt(s['min'])} | {_fmt(s['mean'])} | "
+                         f"{_fmt(s['max'])} | {_fmt(s['last'])} |")
+        else:
+            lines.append(f"  {name:<28} {kind:<9} {unit:<8} n={s['n']:<6} "
+                         f"min={_fmt(s['min'])} mean={_fmt(s['mean'])} "
+                         f"max={_fmt(s['max'])} last={_fmt(s['last'])}")
+    lines.extend(hist_sections)
+    return lines
+
+
+def _quarantine_timeline(rows: List[dict], md: bool) -> List[str]:
+    events = [r for r in rows
+              if r.get("event", "").startswith("serve.quarantine.")]
+    if not events:
+        return []
+    lines = ["## Quarantine timeline" if md else "Quarantine timeline", ""]
+    for e in events:
+        kind = e["event"].rsplit(".", 1)[-1]
+        step = e.get("step")
+        parts = [f"step {step}" if step is not None else "step ?",
+                 f"replica {e.get('replica', '?')}", kind]
+        if "score" in e and e["score"] is not None:
+            parts.append(f"score={_fmt(float(e['score']))}")
+        if "backoff" in e:
+            parts.append(f"backoff={e['backoff']}")
+        if e.get("requests"):
+            parts.append(f"requests={e['requests']}")
+        if "evictions" in e:
+            parts.append(f"evictions={e['evictions']}")
+        prefix = "- " if md else "  "
+        lines.append(prefix + "  ".join(str(p) for p in parts))
+    return lines
+
+
+def _replica_health(rows: List[dict], md: bool) -> List[str]:
+    """Pivot the (R,)-vector serve.replica.* gauges into one line per
+    replica: first/last vote mass, last score, eviction count."""
+    mass: Dict[int, List[float]] = defaultdict(list)
+    score: Dict[int, List[float]] = defaultdict(list)
+    evictions: Dict[int, int] = defaultdict(int)
+    for row in rows:
+        name = row.get("metric")
+        if name in ("serve.replica.vote_mass", "serve.replica.score"):
+            dest = mass if name.endswith("vote_mass") else score
+            for r, v in enumerate(_flatten(row["value"])):
+                dest[r].append(v)
+        elif row.get("event") == "serve.quarantine.evict":
+            if row.get("replica") is not None:
+                evictions[int(row["replica"])] += 1
+    if not mass and not score:
+        return []
+    lines = ["## Per-replica health" if md else "Per-replica health", ""]
+    if md:
+        lines += ["| replica | mass first | mass last | score last "
+                  "| evictions |", "|---:|---:|---:|---:|---:|"]
+    for r in sorted(set(mass) | set(score)):
+        m, s = mass.get(r), score.get(r)
+        m_first = _fmt(m[0]) if m else "-"
+        m_last = _fmt(m[-1]) if m else "-"
+        s_last = _fmt(s[-1]) if s else "-"
+        ev = evictions.get(r, 0)
+        if md:
+            lines.append(f"| {r} | {m_first} | {m_last} | {s_last} | {ev} |")
+        else:
+            lines.append(f"  replica {r}: mass {m_first} -> {m_last}  "
+                         f"score last {s_last}  evictions {ev}")
+    return lines
+
+
+def _fleet_losses(rows: List[dict], md: bool) -> List[str]:
+    """Per-scenario first -> last loss from the vector fleet.loss rows,
+    grouped by fleet group label when present."""
+    by_group: Dict[str, List[List[float]]] = defaultdict(list)
+    for row in rows:
+        if row.get("metric") == "fleet.loss":
+            by_group[str(row.get("group", "0"))].append(
+                _flatten(row["value"]))
+    if not by_group:
+        return []
+    labels: Dict[str, List[str]] = {}
+    for row in rows:
+        if row.get("event") == "fleet.group":
+            labels[str(row.get("group", "0"))] = row.get("scenarios") or []
+    lines = ["## Fleet loss trajectories" if md else
+             "Fleet loss trajectories", ""]
+    for gid in sorted(by_group):
+        steps = by_group[gid]
+        names = labels.get(gid, [])
+        n_scen = max(len(s) for s in steps)
+        for i in range(n_scen):
+            traj = [s[i] for s in steps if i < len(s)]
+            name = names[i] if i < len(names) else f"scenario {i}"
+            prefix = "- " if md else "  "
+            lines.append(f"{prefix}group {gid} / {name}: "
+                         f"loss {_fmt(traj[0])} -> {_fmt(traj[-1])} "
+                         f"over {len(traj)} steps")
+    return lines
+
+
+def _request_summary(rows: List[dict], md: bool) -> List[str]:
+    admits = [r for r in rows if r.get("event") == "serve.request.admit"]
+    finishes = [r for r in rows if r.get("event") == "serve.request.finish"]
+    if not admits and not finishes:
+        return []
+    lines = ["## Requests" if md else "Requests", ""]
+    gen = sum(int(r.get("gen_tokens", 0) or 0) for r in finishes)
+    prefix = "- " if md else "  "
+    lines.append(f"{prefix}admitted {len(admits)}, finished {len(finishes)}, "
+                 f"{gen} generated tokens")
+    return lines
+
+
+def _trace_summary(trace_doc: dict, md: bool) -> List[str]:
+    events = trace_doc.get("traceEvents", [])
+    if not events:
+        return []
+    by_name: Dict[str, List[float]] = defaultdict(list)
+    for ev in events:
+        if ev.get("ph") == "X":
+            by_name[ev["name"]].append(float(ev.get("dur", 0.0)))
+    lines = ["## Trace spans" if md else "Trace spans", ""]
+    if md:
+        lines += ["| span | count | total ms | mean us |",
+                  "|---|---:|---:|---:|"]
+    for name in sorted(by_name):
+        durs = by_name[name]
+        total_ms = sum(durs) / 1e3
+        mean_us = sum(durs) / len(durs)
+        if md:
+            lines.append(f"| `{name}` | {len(durs)} | {_fmt(total_ms)} | "
+                         f"{_fmt(mean_us)} |")
+        else:
+            lines.append(f"  {name:<24} n={len(durs):<6} "
+                         f"total={_fmt(total_ms)}ms mean={_fmt(mean_us)}us")
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def render_summary(rows: List[dict], trace_doc: Optional[dict] = None,
+                   fmt: str = "text", title: str = "obs run") -> str:
+    """Render parsed metric rows (+ optional parsed trace doc) into a
+    ``text`` or ``md`` report string."""
+    if fmt not in ("text", "md"):
+        raise ValueError(f"fmt must be 'text' or 'md', got {fmt!r}")
+    md = fmt == "md"
+    lines: List[str] = [f"# {title}" if md else f"== {title} =="]
+    for section in (_metric_table(rows, md),
+                    _request_summary(rows, md),
+                    _replica_health(rows, md),
+                    _quarantine_timeline(rows, md),
+                    _fleet_losses(rows, md)):
+        if section:
+            lines.append("")
+            lines.extend(section)
+    if trace_doc is not None:
+        section = _trace_summary(trace_doc, md)
+        if section:
+            lines.append("")
+            lines.extend(section)
+    if len(lines) == 1:
+        lines += ["", "(no rows)"]
+    return "\n".join(lines) + "\n"
+
+
+def summarize_files(metrics_path: Union[str, Path],
+                    trace_path: Optional[Union[str, Path]] = None,
+                    fmt: str = "text") -> str:
+    """Load a metrics JSONL (and optionally a trace JSON) and render the
+    summary. The file-level twin of :func:`render_summary`."""
+    rows = load_jsonl(metrics_path)
+    trace_doc = None
+    if trace_path is not None:
+        trace_doc = json.loads(Path(trace_path).read_text())
+    return render_summary(rows, trace_doc, fmt=fmt,
+                          title=str(Path(metrics_path).name))

@@ -32,6 +32,7 @@ Metrics are split into compile (warmup) / prefill / decode wall time;
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import time
@@ -52,6 +53,9 @@ from repro.serve.scheduler import (PrefillPlan, Request, Scheduler,
                                    default_buckets)
 
 Pytree = Any
+
+# reusable no-op span for uninstrumented engines (nullcontext is reentrant)
+_NULL_CTX = contextlib.nullcontext()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,10 +110,16 @@ class ServeEngine:
     ``mesh`` optionally threads the launch/specs.py decode shardings:
     params get the weight-stationary decode layout and the slot cache the
     dp-batched cache layout, with the decode output sharding pinned to the
-    input so the cache round-trips in place."""
+    input so the cache round-trips in place.
+
+    ``obs`` optionally attaches a :class:`repro.obs.RunObs`: per-call
+    prefill/decode spans + wall-time metrics, queue depth, slot/page
+    occupancy, and request lifecycle events (admit → async span → finish)
+    land in its sink/tracer. ``None`` (default) is zero-cost — the jitted
+    steps are identical and no host-side bookkeeping runs."""
 
     def __init__(self, cfg: ModelConfig, params: Pytree, scfg: ServeConfig,
-                 engine: str = "continuous", mesh=None):
+                 engine: str = "continuous", mesh=None, obs=None):
         if not cfg.supports_decode():
             raise ValueError(f"{cfg.name} is encoder-only: no decode path")
         if engine not in ("continuous", "static"):
@@ -117,6 +127,11 @@ class ServeEngine:
         self.cfg = cfg
         self.scfg = scfg
         self.engine = engine
+        # optional repro.obs.RunObs handle; None (default) is the zero-cost
+        # path — every instrumentation site below is behind this guard
+        self._obs = obs
+        self._prefill_times: List[float] = []
+        self._decode_times: List[float] = []
         self.static = engine == "static"
         S = scfg.n_slots
         # static mode prefills the whole batch at once; continuous packs up
@@ -283,17 +298,39 @@ class ServeEngine:
             if self.scfg.temperature > 0.0:
                 keys[i] = self._req_key(r.uid)
 
+        if self._obs is not None:
+            step_no = self.report.decode_steps
+            for i, r in enumerate(plan.requests):
+                self._obs.request_begin(r.uid, slot=int(slot_ids[i]),
+                                        prompt_len=r.prompt_len)
+                self._obs.event("serve.request.admit", step=step_no,
+                                uid=r.uid, slot=int(slot_ids[i]),
+                                prompt_len=r.prompt_len)
+
         t0 = time.perf_counter()
-        logits, pcache = self._prefill(self.params, batch, jnp.asarray(lens))
-        if self.paged:
-            self.cache = self._insert(self.cache, pcache, slot_ids,
-                                      jnp.asarray(self.pager.table))
-        else:
-            self.cache = self._insert(self.cache, pcache, slot_ids)
-        first = np.asarray(self._first(logits, jnp.asarray(keys)))
-        jax.block_until_ready(self.cache)
-        self.report.prefill_s += time.perf_counter() - t0
+        with self._obs.span("prefill", n=n, bucket=plan.bucket_len) \
+                if self._obs is not None else _NULL_CTX:
+            logits, pcache = self._prefill(self.params, batch,
+                                           jnp.asarray(lens))
+            if self.paged:
+                self.cache = self._insert(self.cache, pcache, slot_ids,
+                                          jnp.asarray(self.pager.table))
+            else:
+                self.cache = self._insert(self.cache, pcache, slot_ids)
+            first = np.asarray(self._first(logits, jnp.asarray(keys)))
+            jax.block_until_ready(self.cache)
+        dt = time.perf_counter() - t0
+        self.report.prefill_s += dt
         self.report.prefill_tokens += int(text_lens[:n].sum())
+        if self._obs is not None:
+            self._prefill_times.append(dt)
+            step_no = self.report.decode_steps
+            self._obs.metric("serve.prefill_s", dt, step=step_no)
+            self._obs.metric("serve.prefill_tokens",
+                             self.report.prefill_tokens, step=step_no)
+            self._obs.metric("serve.queue_depth", self.sched.n_waiting,
+                             step=step_no)
+            self._obs.counter("serve.queue", depth=self.sched.n_waiting)
 
         now = self._now()      # stamp AFTER the device work that produced it
         for i, r in enumerate(plan.requests):
@@ -312,6 +349,12 @@ class ServeEngine:
         eos = self.scfg.eos_id is not None and tok == self.scfg.eos_id
         if eos or len(r.out_tokens) >= r.max_new_tokens:
             r.t_finish = now
+            if self._obs is not None:
+                self._obs.event("serve.request.finish",
+                                step=self.report.decode_steps, uid=r.uid,
+                                slot=slot, gen_tokens=len(r.out_tokens),
+                                eos=bool(eos))
+                self._obs.request_end(r.uid, gen_tokens=len(r.out_tokens))
             if not self.static:
                 self._release(slot)
 
@@ -329,11 +372,28 @@ class ServeEngine:
         if self.paged:
             self._page_occ_sum += self.pager.occupancy
             args += (jnp.asarray(self.pager.table),)
-        toks, self.cache = self._decode(*args)
-        toks = np.asarray(toks)                      # host sync
-        self.report.decode_s += time.perf_counter() - t0
+        with self._obs.span("decode", slots=useful) \
+                if self._obs is not None else _NULL_CTX:
+            toks, self.cache = self._decode(*args)
+            toks = np.asarray(toks)                  # host sync
+        dt = time.perf_counter() - t0
+        self.report.decode_s += dt
         self.report.decode_steps += 1
         self._occ_sum += useful / self.slots.n_slots
+        if self._obs is not None:
+            step_no = self.report.decode_steps
+            occ = useful / self.slots.n_slots
+            self._decode_times.append(dt)
+            self._obs.metric("serve.decode_s", dt, step=step_no)
+            self._obs.metric("serve.slot_occupancy", occ, step=step_no)
+            self._obs.metric("serve.queue_depth", self.sched.n_waiting,
+                             step=step_no)
+            counters = {"depth": self.sched.n_waiting, "slots": occ}
+            if self.paged:
+                self._obs.metric("serve.page_occupancy",
+                                 self.pager.occupancy, step=step_no)
+                counters["pages"] = self.pager.occupancy
+            self._obs.counter("serve.occupancy", **counters)
 
         now = self._now()      # stamp AFTER the device work that produced it
         for slot in list(self.slot_req):
@@ -363,6 +423,16 @@ class ServeEngine:
         semantically untouched."""
         cfg, B = self.cfg, self._prefill_batch
         t0 = time.perf_counter()
+        ctx = (self._obs.span("warmup", buckets=len(set(bucket_lens)))
+               if self._obs is not None else _NULL_CTX)
+        with ctx:
+            self._warmup_body(bucket_lens)
+        dt = time.perf_counter() - t0
+        self.report.compile_s += dt
+        return dt
+
+    def _warmup_body(self, bucket_lens: Sequence[int]) -> None:
+        cfg, B = self.cfg, self._prefill_batch
         for L in sorted({self.sched.bucket_for(l) for l in bucket_lens}):
             batch = {"tokens": jnp.zeros((B, L), jnp.int32)}
             lens = np.ones((B,), np.int32)
@@ -387,9 +457,6 @@ class ServeEngine:
             dargs += (jnp.asarray(self.pager.table),)
         _, self.cache = self._decode(*dargs)
         jax.block_until_ready(self.cache)
-        dt = time.perf_counter() - t0
-        self.report.compile_s += dt
-        return dt
 
     # ------------------------------------------------------------------
     # serving loop
@@ -474,12 +541,24 @@ class ServeEngine:
         total = rep.compile_s + rep.prefill_s + rep.decode_s
         if total > 0:
             rep.combined_tok_s = rep.gen_tokens / total
+        if self._obs is not None:
+            from repro.obs.metrics import TIME_EDGES, bucketize
+            step_no = rep.decode_steps
+            self._obs.metric("serve.gen_tokens", rep.gen_tokens, step=step_no)
+            if self._prefill_times:
+                self._obs.metric("serve.prefill_s_hist",
+                                 bucketize(self._prefill_times, TIME_EDGES),
+                                 step=step_no)
+            if self._decode_times:
+                self._obs.metric("serve.decode_s_hist",
+                                 bucketize(self._decode_times, TIME_EDGES),
+                                 step=step_no)
         return rep
 
 
 def serve(cfg: ModelConfig, params: Pytree, requests: Sequence[Request],
           scfg: ServeConfig, engine: str = "continuous", mesh=None,
-          warmup: bool = True) -> ServeReport:
+          warmup: bool = True, obs=None) -> ServeReport:
     """One-shot helper: build an engine, serve the workload, return the report."""
-    eng = ServeEngine(cfg, params, scfg, engine=engine, mesh=mesh)
+    eng = ServeEngine(cfg, params, scfg, engine=engine, mesh=mesh, obs=obs)
     return eng.run(requests, warmup=warmup)

@@ -208,13 +208,18 @@ class ReplicatedServeEngine(ServeEngine):
 
     def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig,
                  rcfg: ReplicatedConfig = ReplicatedConfig(),
-                 engine: str = "continuous", mesh=None):
+                 engine: str = "continuous", mesh=None, obs=None):
         if mesh is not None:
             raise NotImplementedError("replicated serving + mesh: the replica "
                                       "axis is not wired into the shardings")
         rcfg.validate()
         self.rcfg = rcfg
         R = rcfg.n_replicas
+        # STATIC device-metrics flag, fixed before the decode step is built:
+        # True compiles the serve.vote.* collecting step variant (one compile
+        # either way), False keeps the uninstrumented HLO
+        self._collect = obs is not None and getattr(obs, "device_metrics",
+                                                    False)
         if isinstance(params, (list, tuple)):
             base_params = params[0]
             params_stack = _stack_params(params, R)
@@ -226,7 +231,7 @@ class ReplicatedServeEngine(ServeEngine):
             base_params = params
             params_stack = _stack_params(params, R)
 
-        super().__init__(cfg, base_params, scfg, engine=engine)
+        super().__init__(cfg, base_params, scfg, engine=engine, obs=obs)
 
         # replicated report + staleness-derived base vote masses
         self.report = ReplicatedServeReport(
@@ -261,7 +266,7 @@ class ReplicatedServeEngine(ServeEngine):
                 cfg, R, rcfg.attack, byz=rcfg.byz, vote=rcfg.vote,
                 lam=rcfg.lam, zeno_rho=rcfg.zeno_rho,
                 temperature=scfg.temperature, top_k=scfg.top_k,
-                paged=self.paged),
+                paged=self.paged, collect_metrics=self._collect),
             donate_argnums=(1,))
         self._decode = self._voted_decode
 
@@ -281,6 +286,7 @@ class ReplicatedServeEngine(ServeEngine):
         self._attack_key = jax.random.PRNGKey(rcfg.attack_seed)
         self._attack_ctr = 0
         self._last_scores: Optional[np.ndarray] = None
+        self._last_vm: Optional[dict] = None
         # warmup() drives _decode directly (no _decode_tick around it)
         self._w_now = self._base_w.copy()
 
@@ -322,9 +328,11 @@ class ReplicatedServeEngine(ServeEngine):
         return nxt
 
     def _voted_decode(self, params, cache, tokens, req_keys, gen_idx, *rest):
-        nxt, scores, cache = self._decode_jit(
+        out = self._decode_jit(
             params, cache, tokens, req_keys, gen_idx,
             jnp.asarray(self._w_now), self._next_attack_key(), *rest)
+        nxt, scores, cache = out[:3]
+        self._last_vm = out[3] if self._collect else None
         self._last_scores = scores
         return nxt, cache
 
@@ -336,6 +344,16 @@ class ReplicatedServeEngine(ServeEngine):
         self._w_now = self._vote_weights()
         active = [s for s, r in self.slot_req.items() if not r.done]
         super()._decode_tick()
+        if self._obs is not None:
+            step = self.report.decode_steps
+            self._obs.metric("serve.replica.vote_mass", self._w_now,
+                             step=step)
+            if active and self._last_scores is not None:
+                sc = np.asarray(self._last_scores)
+                self._obs.metric("serve.replica.score",
+                                 np.median(sc[:, active], axis=1), step=step)
+            if self._collect and getattr(self, "_last_vm", None) is not None:
+                self._obs.metric_tree(self._last_vm, step=step)
         if active and self._last_scores is not None:
             self._update_health(self._w_now, active,
                                 np.asarray(self._last_scores))
@@ -344,6 +362,10 @@ class ReplicatedServeEngine(ServeEngine):
                        scores: np.ndarray) -> None:
         rc = self.rcfg
         step = self.report.decode_steps    # step just completed (1-based)
+        # requests whose tokens this vote decided (finished slots may have
+        # been released by the base tick already — guard the lookup)
+        uids = sorted(self.slot_req[s].uid for s in active
+                      if s in self.slot_req)
         for h in self.health:
             r = h.replica
             if h.quarantined:
@@ -352,6 +374,10 @@ class ReplicatedServeEngine(ServeEngine):
                 if h.backoff_remaining <= 0:
                     h.quarantined = False   # re-admission (probation: one
                     h.strikes = 0           # fresh run of strikes)
+                    if self._obs is not None:
+                        self._obs.event("serve.quarantine.readmit",
+                                        step=step, replica=r,
+                                        evictions=h.evictions)
                 continue
             if w[r] <= 0.0:                 # dead / hanging this step
                 h.tokens_missed += 1
@@ -373,9 +399,15 @@ class ReplicatedServeEngine(ServeEngine):
                     rc.readmit_after * rc.backoff_factor ** (h.evictions - 1))
                 if h.first_eviction_step is None:
                     h.first_eviction_step = step
-                self.report.quarantine_events.append(
-                    {"replica": r, "step": step,
-                     "backoff": h.backoff_remaining})
+                # keys are ADDITIVE on the pre-PR event dict (tests pin
+                # replica/step/backoff): score at eviction + the request
+                # uids whose streams the quarantined replica was voting on
+                event = {"replica": r, "step": step,
+                         "backoff": h.backoff_remaining,
+                         "score": round(sc, 4), "requests": uids}
+                self.report.quarantine_events.append(event)
+                if self._obs is not None:
+                    self._obs.event("serve.quarantine.evict", **event)
 
     def _finalize(self, reqs) -> ReplicatedServeReport:
         rep = super()._finalize(reqs)
@@ -389,7 +421,8 @@ class ReplicatedServeEngine(ServeEngine):
 def serve_replicated(cfg: ModelConfig, params, requests,
                      scfg: ServeConfig, rcfg: ReplicatedConfig,
                      engine: str = "continuous",
-                     warmup: bool = True) -> ReplicatedServeReport:
+                     warmup: bool = True, obs=None) -> ReplicatedServeReport:
     """One-shot helper mirroring :func:`repro.serve.engine.serve`."""
-    eng = ReplicatedServeEngine(cfg, params, scfg, rcfg, engine=engine)
+    eng = ReplicatedServeEngine(cfg, params, scfg, rcfg, engine=engine,
+                                obs=obs)
     return eng.run(requests, warmup=warmup)

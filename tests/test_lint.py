@@ -112,8 +112,9 @@ def test_engine_insert_handoff_use_after_donation_detected(tmp_path):
     handoff in serve/engine.py is the exact regression RL101 exists for."""
     bugged = _mutated(
         tmp_path, ROOT / "src" / "repro" / "serve" / "engine.py",
-        "            self.cache = self._insert(self.cache, pcache, slot_ids)",
-        "            self._insert(self.cache, pcache, slot_ids)")
+        "                self.cache = self._insert(self.cache, pcache, "
+        "slot_ids)",
+        "                self._insert(self.cache, pcache, slot_ids)")
     active, _, _ = lint_files([bugged], AST_RULES)
     assert any(f.code == "RL101" and "self.cache" in f.message
                for f in active), [f.render() for f in active]
@@ -124,10 +125,10 @@ def test_fleet_vstep_loop_use_after_donation_detected(tmp_path):
     step every loop iteration; dropping the rebind must flag RL101."""
     bugged = _mutated(
         tmp_path, ROOT / "src" / "repro" / "fleet" / "batched.py",
-        "            state, _ = self._vstep(state, batch, probs, masks, "
-        "weighted)",
-        "            out, _ = self._vstep(state, batch, probs, masks, "
-        "weighted)")
+        "            state, metrics = self._vstep(state, batch, probs, "
+        "masks, weighted)",
+        "            out, metrics = self._vstep(state, batch, probs, "
+        "masks, weighted)")
     active, _, _ = lint_files([bugged], AST_RULES)
     assert any(f.code == "RL101" and "'state'" in f.message
                for f in active), [f.render() for f in active]

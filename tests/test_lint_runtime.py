@@ -132,6 +132,51 @@ def test_scheduler_one_compile_per_bucket(dense_params):
 
 
 # ---------------------------------------------------------------------------
+# obs: telemetry must not change the compile story
+# ---------------------------------------------------------------------------
+
+def test_fleet_obs_group_is_one_compile_and_rerun_free(tmp_path):
+    """A metric-collecting fleet group is still ONE compile (the engine.*
+    outputs ride the same jitted vmapped step), and re-running it with
+    different traced knobs stays compile-free."""
+    from repro.obs import MetricSink, RunObs
+    obs = RunObs(sink=MetricSink(tmp_path / "m.jsonl"), device_metrics=True)
+    scs = [QUAD, QUAD._replace(seed=3)]
+    FleetGroup(scs, collect_metrics=True).run(obs=obs)   # warm eager shapes
+    with compile_count() as c1:
+        grp = FleetGroup(scs, collect_metrics=True)
+        grp.run(obs=obs)
+    assert c1.count == 1, c1.events
+    with compile_count() as c2:
+        grp.run([QUAD._replace(seed=9),
+                 QUAD._replace(byz_frac=0.6, weighted=False)], obs=obs)
+    assert c2.count == 0, c2.events
+    obs.close()
+
+
+def test_scheduler_obs_keeps_compile_pins(dense_params, tmp_path):
+    """Host-side obs (spans + rows) on a ServeEngine keeps the exact warmup
+    compile count (n_buckets + 2) and a compile-free run — the single-engine
+    jitted steps are untouched by instrumentation."""
+    from repro.obs import RunObs
+    reqs = synth_workload(8, V, seed=0, prompt_lens=(4, 24), gen_lens=(2, 8))
+    ServeEngine(DENSE, dense_params, SCFG).run(
+        [copy.deepcopy(r) for r in reqs])                # warm eager shapes
+
+    obs = RunObs.open(tmp_path, "serve", compile_events=False)
+    eng = ServeEngine(DENSE, dense_params, SCFG, obs=obs)
+    lens = [r.prompt_len for r in reqs]
+    n_buckets = len({eng.sched.bucket_for(l) for l in lens})
+    with compile_count() as cw:
+        eng.warmup(lens)
+    assert cw.count == n_buckets + 2, cw.events
+    with compile_count() as cr:
+        eng.run([copy.deepcopy(r) for r in reqs], warmup=False)
+    assert cr.count == 0, cr.events
+    obs.close()
+
+
+# ---------------------------------------------------------------------------
 # breakdown bisection: probes reuse the compiled step
 # ---------------------------------------------------------------------------
 

@@ -1,9 +1,10 @@
-"""replint docs rule group RD201/RD202 (absorbed from tools/docs_check.py).
+"""replint docs rule group RD201-RD203 (absorbed from tools/docs_check.py).
 
 | code  | check                                                             |
 |-------|-------------------------------------------------------------------|
 | RD201 | broken intra-repo relative markdown link                          |
 | RD202 | public ``src/repro`` module missing a module docstring            |
+| RD203 | registered obs metric/event missing from the obs README catalog   |
 
 Unlike the AST groups these are repo-wide, not per-target-path: links span
 the whole markdown tree and the docstring contract covers all of
@@ -71,5 +72,46 @@ def check_docstrings(root: Path = REPO_ROOT) -> List[Finding]:
     return findings
 
 
+def registered_obs_names(root: Path = REPO_ROOT) -> List[tuple]:
+    """``(name, lineno)`` for every literal-string ``register(...)`` /
+    ``register_event(...)`` call in the obs metric registry — extracted by
+    AST, never by import, so the lint gate needs no jax (or PYTHONPATH)."""
+    metrics_py = root / "src" / "repro" / "obs" / "metrics.py"
+    if not metrics_py.exists():
+        return []
+    names = []
+    for node in ast.walk(ast.parse(metrics_py.read_text())):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in ("register", "register_event")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            continue
+        names.append((node.args[0].value, node.lineno))
+    return names
+
+
+def check_metric_catalog(root: Path = REPO_ROOT) -> List[Finding]:
+    """RD203: every metric/event name registered in
+    ``src/repro/obs/metrics.py`` must appear (backticked or bare) in the
+    ``src/repro/obs/README.md`` catalog — the README is the contract for
+    what a run's JSONL can contain, so an undocumented name is doc rot."""
+    names = registered_obs_names(root)
+    if not names:
+        return []
+    readme = root / "src" / "repro" / "obs" / "README.md"
+    rel = "src/repro/obs/metrics.py"
+    if not readme.exists():
+        return [Finding("RD203", rel, names[0][1],
+                        "src/repro/obs/README.md missing but the metric "
+                        "registry is non-empty")]
+    text = readme.read_text()
+    return [Finding("RD203", rel, ln,
+                    f"registered name '{name}' not in obs README catalog")
+            for name, ln in names if name not in text]
+
+
 def docs_findings(root: Path = REPO_ROOT) -> List[Finding]:
-    return check_links(root) + check_docstrings(root)
+    return check_links(root) + check_docstrings(root) + \
+        check_metric_catalog(root)
