@@ -1,6 +1,6 @@
 """Serve-path A/B benchmarks on a skewed-length workload.
 
-Two A/Bs share one workload and one set of jitted steps:
+Three A/Bs share one workload style:
 
 - static fixed-batch vs continuous-batching decode (short requests pay for
   the longest one in a static batch; continuous retires and backfills slots
@@ -9,9 +9,16 @@ Two A/Bs share one workload and one set of jitted steps:
   global layer however short the request; the block-table paged cache pins
   only ``ceil((prompt + gen) / page_size)`` pages — serve/cache.py), with
   the HBM-per-request accounting from ``slot_hbm_bytes`` recorded next to
-  the decode throughput so the memory win is visible at equal tok/s.
+  the decode throughput so the memory win is visible at equal tok/s;
+- CHUNKED prefill (unified ragged step) vs the legacy bucketed trio on a
+  skewed workload where one LONG prompt arrives mid-decode: the bucketed
+  engine pays an in-band XLA prefill compile for the long prompt's unseen
+  bucket (plus a whole-prompt prefill stall), while the chunked engine
+  streams it through the two already-compiled unified shapes — its TTFT is
+  asserted STRICTLY lower, at no decode tok/s regression, with TTFT
+  p50/p99 recorded next to decode tok/s (unit ``ms``).
 
-Greedy outputs are asserted token-identical across ALL four engine×layout
+Greedy outputs are asserted token-identical across ALL engine×layout
 combinations before any number is reported — a perf/memory figure from
 diverging outputs would be meaningless.
 
@@ -26,9 +33,12 @@ import copy
 
 import jax
 
+import numpy as np
+
 from repro.configs import smoke_config
 from repro.models.lm import init_lm
-from repro.serve import ServeConfig, ServeEngine, slot_hbm_bytes, synth_workload
+from repro.serve import (Request, ServeConfig, ServeEngine, slot_hbm_bytes,
+                         synth_workload)
 
 
 def _run_pair(cfg, params, workload, scfg):
@@ -43,6 +53,67 @@ def _run_pair(cfg, params, workload, scfg):
             assert reports["continuous"].outputs[uid] == toks, \
                 f"static/continuous divergence on request {uid}"
     return reports
+
+
+def _chunked_vs_bucketed(cfg, params) -> list[str]:
+    """TTFT A/B: short decode streams running when one LONG prompt arrives.
+
+    Both engines are warmed ONLY on the shapes the short requests need, as a
+    real server would be. The bucketed engine then meets the long prompt's
+    bucket for the first time mid-serve — an in-band XLA prefill compile on
+    the critical path, plus a whole-prompt prefill stall for every decoding
+    slot. The chunked engine has no per-length shapes to meet: the long
+    prompt streams through the already-compiled unified step. Its TTFT must
+    be STRICTLY lower; decode throughput must not regress."""
+    rng = np.random.default_rng(7)
+    long_len, gen_max = 64, 16
+    max_len = long_len + 2 * gen_max
+    long_toks = rng.integers(0, cfg.vocab, long_len).astype(np.int32)
+    shorts = synth_workload(6, cfg.vocab, seed=3, prompt_lens=(8, 16),
+                            gen_lens=(16, 32), short_frac=0.0, rate=0.0)
+    kw = dict(n_slots=8, max_len=max_len, max_prefill_batch=4)
+    reports, long_ttft = {}, {}
+    for tag in ("chunked", "bucketed"):
+        reqs = [copy.deepcopy(r) for r in shorts]
+        long_req = Request(uid=99, arrival=0.05, max_new_tokens=gen_max,
+                           tokens=long_toks.copy())
+        reqs.append(long_req)
+        eng = ServeEngine(cfg, params,
+                          ServeConfig(chunked=(tag == "chunked"), **kw))
+        assert eng.chunked == (tag == "chunked")
+        # warm on the SHORT prompts only — the long prompt's shapes (if
+        # any) are met in band, exactly as in a live server
+        eng.warmup([r.prompt_len for r in shorts])
+        reports[tag] = eng.run(reqs, warmup=False)
+        long_ttft[tag] = long_req.t_first_token - long_req.arrival
+    ch, bu = reports["chunked"], reports["bucketed"]
+    for uid, toks in bu.outputs.items():
+        assert ch.outputs[uid] == toks, \
+            f"chunked/bucketed divergence on request {uid}"
+    # the headline regression pins: the mid-decode long prompt reaches its
+    # first token strictly faster chunked, and decode tok/s does not regress
+    assert long_ttft["chunked"] < long_ttft["bucketed"], long_ttft
+    tok_ratio = (ch.decode_tok_s / bu.decode_tok_s
+                 if bu.decode_tok_s else 0.0)
+    assert tok_ratio >= 0.7, f"chunked decode regression: {tok_ratio:.2f}"
+
+    rows = []
+    for tag, rep in (("chunked", ch), ("bucketed", bu)):
+        rows += [
+            f"serve_{tag}_ttft_p50_ms,{rep.ttft_p50_s * 1e3:.1f},ms,"
+            f"p99_ms={rep.ttft_p99_s * 1e3:.1f}",
+            f"serve_{tag}_long_ttft_ms,{long_ttft[tag] * 1e3:.1f},ms,"
+            f"prompt={long_len} arriving mid-decode",
+        ]
+    rows += [
+        f"serve_chunked_ttft_speedup,"
+        f"{long_ttft['bucketed'] / long_ttft['chunked']:.2f},ratio,"
+        f"bucketed/chunked long-prompt TTFT (in-band bucket compile "
+        f"vs two pre-compiled unified shapes)",
+        f"serve_chunked_vs_bucketed_tok_ratio,{tok_ratio:.2f},ratio,"
+        f"chunked/bucketed continuous decode tok/s (1.0 = equal)",
+    ]
+    return rows
 
 
 def run(full: bool = False, smoke: bool = False) -> list[str]:
@@ -104,6 +175,9 @@ def run(full: bool = False, smoke: bool = False) -> list[str]:
         f"serve_paged_vs_dense_tok_ratio,{ratio:.2f},ratio,"
         f"paged/dense continuous decode tok/s (1.0 = equal)",
     ]
+
+    # ---- chunked vs bucketed prefill: TTFT under a mid-decode long prompt --
+    rows += _chunked_vs_bucketed(cfg, params)
     return rows
 
 

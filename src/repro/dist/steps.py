@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.attacks import _little_zmax, flip_labels
 from repro.models.config import ModelConfig
-from repro.models.lm import decode_step, init_lm, lm_loss, prefill
+from repro.models.lm import chunk_step, decode_step, init_lm, lm_loss, prefill
 from repro.optim.mu2sgd import (OptConfig, OptState, _project, init_opt,
                                 opt_query_points, opt_update, server_step)
 from repro.utils import global_norm
@@ -398,6 +398,45 @@ def make_decode_slots_step(cfg: ModelConfig, temperature: float = 0.0,
     return step
 
 
+def make_unified_step(cfg: ModelConfig, temperature: float = 0.0,
+                      top_k: int = 0, paged: bool = False):
+    """step(params, cache, tokens, row_slots, row_lens, row_fresh, req_keys,
+    tok_idx[, page_table]) -> (next_tokens (Rn,), cache).
+
+    THE single jitted step of the chunked serve engine — it replaces the
+    prefill → insert → decode trio: prefill chunks and decode rows share one
+    ragged ``chunk_step`` call (models/lm.py), so the compile count is one
+    per token-budget SHAPE CLASS — the mixed (S + chunk_rows, C) batch and
+    the decode-only (S, 1) batch — independent of the workload's
+    prompt-length mix. ``tok_idx`` (Rn,) int32 is each row's sampled-token
+    index within its request (decode rows: gen_idx; a chunk row finishing
+    its prompt: 0; non-final chunk rows: ignored — their sample is
+    discarded host-side). Callers donate the cache
+    (``donate_argnums=(1,)``)."""
+
+    if paged:
+        def step(params, cache: dict, tokens: Array, row_slots: Array,
+                 row_lens: Array, row_fresh: Array, req_keys: Array,
+                 tok_idx: Array, page_table: Array):
+            logits, cache = chunk_step(params, cfg, cache, tokens, row_slots,
+                                       row_lens, row_fresh,
+                                       page_table=page_table)
+            nxt = sample_next(logits[:, 0], req_keys, tok_idx, temperature,
+                              top_k)
+            return nxt, cache
+        return step
+
+    def step(params, cache: dict, tokens: Array, row_slots: Array,
+             row_lens: Array, row_fresh: Array, req_keys: Array,
+             tok_idx: Array):
+        logits, cache = chunk_step(params, cfg, cache, tokens, row_slots,
+                                   row_lens, row_fresh)
+        nxt = sample_next(logits[:, 0], req_keys, tok_idx, temperature, top_k)
+        return nxt, cache
+
+    return step
+
+
 # ---------------------------------------------------------------------------
 # Replicated (Byzantine-tolerant) serve path
 # ---------------------------------------------------------------------------
@@ -534,5 +573,58 @@ def make_replicated_decode_step(cfg: ModelConfig, n_replicas: int,
 
     def step(params, cache, tokens, req_keys, gen_idx, weights, key):
         return body(params, cache, tokens, req_keys, gen_idx, weights, key)
+
+    return step
+
+
+def make_replicated_unified_step(cfg: ModelConfig, n_replicas: int,
+                                 attack, byz: Tuple[int, ...] = (),
+                                 vote: str = "cwmed", lam: float = 0.25,
+                                 zeno_rho: float = 1e-3,
+                                 temperature: float = 0.0, top_k: int = 0,
+                                 paged: bool = False,
+                                 collect_metrics: bool = False):
+    """step(params_stack, cache_stack, tokens, row_slots, row_lens,
+    row_fresh, req_keys, tok_idx, weights, key[, page_table])
+    -> (next_tokens (Rn,), scores (R, Rn), cache_stack).
+
+    The replicated form of :func:`make_unified_step`: every replica runs the
+    SAME ragged chunk batch through its own params/cache (vmapped stacked
+    pytrees), Byzantine replicas corrupt their reported per-row logits, and
+    each row's token is sampled from the robust vote — so chunked prefill
+    AND decode inherit the f < R/2 masking guarantee in one call. Decode
+    rows sit at columns 0..S-1 (row index == slot id), which is what keeps
+    the engine's host-side quarantine indexing (`scores[r, active_slots]`)
+    valid on mixed batches. ``collect_metrics`` (STATIC) appends the
+    ``serve.vote.*`` telemetry dict exactly as in
+    :func:`make_replicated_decode_step`."""
+    run_vote = vote_logits_fn(attack, byz, n_replicas, vote=vote, lam=lam,
+                              zeno_rho=zeno_rho,
+                              collect_metrics=collect_metrics)
+
+    def body(params, cache, tokens, row_slots, row_lens, row_fresh, req_keys,
+             tok_idx, weights, key, page_table=None):
+        def one(p, c):
+            return chunk_step(p, cfg, c, tokens, row_slots, row_lens,
+                              row_fresh, page_table=page_table)
+
+        logits, cache = jax.vmap(one)(params, cache)    # (R, Rn, 1, V)
+        voted, scores, *vm = run_vote(logits[:, :, 0, :], weights, key)
+        nxt = sample_next(voted, req_keys, tok_idx, temperature, top_k)
+        if collect_metrics:
+            return nxt, scores, cache, vm[0]
+        return nxt, scores, cache
+
+    if paged:
+        def step(params, cache, tokens, row_slots, row_lens, row_fresh,
+                 req_keys, tok_idx, weights, key, page_table):
+            return body(params, cache, tokens, row_slots, row_lens, row_fresh,
+                        req_keys, tok_idx, weights, key, page_table)
+        return step
+
+    def step(params, cache, tokens, row_slots, row_lens, row_fresh, req_keys,
+             tok_idx, weights, key):
+        return body(params, cache, tokens, row_slots, row_lens, row_fresh,
+                    req_keys, tok_idx, weights, key)
 
     return step

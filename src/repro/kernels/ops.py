@@ -30,7 +30,8 @@ from .wcwmed import wcwmed_pallas, wcwmed_padded
 from .wreduce import gm_step_padded, sqdist_pallas, wcomb_padded, wcomb_pallas
 from .wctma_fused import (DEFAULT_BLOCK_D as FUSED_BLOCK_D, trim_weights,
                           wctma_fused)
-from .swa import paged_decode_pallas, swa_decode_pallas
+from .swa import (paged_decode_pallas, ragged_paged_decode_pallas,
+                  swa_decode_pallas)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -158,6 +159,20 @@ def paged_decode(q, k_pool, v_pool, page_table, pos, *,
         return ref.paged_decode_ref(q, k_pool, v_pool, page_table, pos)
     return paged_decode_pallas(q, k_pool, v_pool, page_table, pos,
                                interpret=interpret)
+
+
+def ragged_paged_decode(q, k_pool, v_pool, page_table, cu_q_lens, q_lens,
+                        kv_lens, *, use_pallas: bool = True,
+                        interpret: bool = True):
+    """Ragged paged attention over a mixed chunked-prefill/decode batch: row
+    ``s`` owns packed q tokens ``[cu_q_lens[s], cu_q_lens[s] + q_lens[s])``
+    at context depth ``kv_lens[s]`` (see kernels/swa.py for the contract)."""
+    if not use_pallas:
+        return ref.ragged_paged_decode_ref(q, k_pool, v_pool, page_table,
+                                           cu_q_lens, q_lens, kv_lens)
+    return ragged_paged_decode_pallas(q, k_pool, v_pool, page_table,
+                                      cu_q_lens, q_lens, kv_lens,
+                                      interpret=interpret)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, chunk: int, *, use_pallas: bool = True,

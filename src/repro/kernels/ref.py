@@ -74,5 +74,40 @@ def paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     return out.reshape(S, H, hd).astype(jnp.float32)
 
 
+def ragged_paged_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                            v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                            cu_q_lens: jnp.ndarray, q_lens: jnp.ndarray,
+                            kv_lens: jnp.ndarray) -> jnp.ndarray:
+    """Ragged paged-attention oracle over a mixed prefill-chunk/decode batch.
+
+    q: (T, H, hd) — packed query tokens for Rn rows; row ``s`` owns tokens
+    ``[cu_q_lens[s], cu_q_lens[s] + q_lens[s])`` (decode rows are q_len=1
+    chunks); tokens between ``cu_q_lens[s] + q_lens[s]`` and
+    ``cu_q_lens[s+1]`` are padding and come back zeroed. k/v_pool:
+    (n_pages + 1, P, KV, hd) page pools (last page = dump); page_table:
+    (Rn, pps) int32 physical pages per row; kv_lens: (Rn,) total context
+    length per row AFTER this chunk (so token ``i`` of row ``s`` sits at
+    absolute position ``kv_lens[s] - q_lens[s] + i`` and attends the causal
+    prefix up to itself). Requires ``q_lens[s] <= cu_q_lens[s+1] -
+    cu_q_lens[s]`` and ``q_lens[s] <= kv_lens[s] <= pps * P``."""
+    T, H, hd = q.shape
+    _, P, KV, _ = k_pool.shape
+    Rn = page_table.shape[0]
+    t_idx = jnp.arange(T)
+    sid = jnp.clip(jnp.searchsorted(cu_q_lens, t_idx, side="right") - 1,
+                   0, Rn - 1)
+    off = t_idx - cu_q_lens[sid]
+    in_seq = off < q_lens[sid]
+    abs_pos = kv_lens[sid] - q_lens[sid] + off          # (T,)
+    kg = k_pool[page_table[sid]].reshape(T, -1, KV, hd)  # (T, pps*P, KV, hd)
+    vg = v_pool[page_table[sid]].reshape(T, -1, KV, hd)
+    idx = jnp.arange(kg.shape[1])
+    valid = in_seq[:, None] & (idx[None, :] <= abs_pos[:, None])
+    cfg = ModelConfig(n_heads=H, n_kv=KV, head_dim=hd)
+    out = _sdpa(cfg, q[:, None], kg, vg, valid[:, None, None, :])
+    out = out.reshape(T, H, hd).astype(jnp.float32)
+    return jnp.where(in_seq[:, None, None], out, 0.0)
+
+
 def ssd_ref(x, dt, A, Bm, Cm, chunk):
     return ssd_chunked(x, dt, A, Bm, Cm, chunk)

@@ -190,3 +190,113 @@ def paged_decode_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
         interpret=interpret,
     )(tbl, pos_arr, qg, k_pool, v_pool)
     return out.reshape(S, H, hd)
+
+
+def _ragged_kernel(cu_ref, ql_ref, kvl_ref, tbl_ref, q_ref, k_ref, v_ref,
+                   o_ref, m_ref, l_ref, acc_ref, *, P: int, KV: int):
+    """Online softmax over a ragged mixed batch, one (row, page) per step.
+
+    Unlike ``_flash_step``, ``p`` is masked explicitly: a grid step streams a
+    page belonging to row ``s`` while the T-token query block spans EVERY
+    row, so whole query rows are routinely all-masked here. With the
+    unmasked ``exp(scores - m_new)`` idiom those rows would contribute
+    ``exp(-1e30 - (-1e30)) = 1`` per key and corrupt the accumulator."""
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    step = s * pl.num_programs(1) + j
+    T, H, hd = q_ref.shape
+    G = H // KV
+    scale = hd ** -0.5
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32).reshape(T, KV, G, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (P, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+    t = jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)
+    start, qlen, kvlen = cu_ref[s], ql_ref[s], kvl_ref[s]
+    in_seq = (t >= start) & (t < start + qlen)
+    abs_pos = kvlen - qlen + (t - start)               # (T, 1)
+    key_idx = j * P + jax.lax.broadcasted_iota(jnp.int32, (1, P), 1)
+    valid = in_seq & (key_idx <= abs_pos)              # (T, P)
+    vmask = valid[:, None, None, :]                    # (T, 1, 1, P)
+
+    scores = jnp.einsum("tkgd,pkd->tkgp", q, k) * scale
+    scores = jnp.where(vmask, scores, -1e30)
+    m_prev = m_ref[...].reshape(T, KV, G)
+    l_prev = l_ref[...].reshape(T, KV, G)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    p = jnp.where(vmask, jnp.exp(scores - m_new[..., None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc = acc_ref[...].reshape(T, KV, G, hd)
+    acc = alpha[..., None] * acc + jnp.einsum("tkgp,pkd->tkgd", p, v)
+    m_ref[...] = m_new.reshape(T, H)
+    l_ref[...] = l_new.reshape(T, H)
+    acc_ref[...] = acc.reshape(T, H, hd)
+
+    @pl.when(step == pl.num_programs(0) * pl.num_programs(1) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30).reshape(T, H, 1)
+        o_ref[...] = acc_ref[...] / l
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ragged_paged_decode_pallas(q: jnp.ndarray, k_pool: jnp.ndarray,
+                               v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                               cu_q_lens: jnp.ndarray, q_lens: jnp.ndarray,
+                               kv_lens: jnp.ndarray, *,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Ragged paged flash attention over a mixed prefill-chunk/decode batch.
+
+    q: (T, H, hd) packed query tokens — row ``s`` of the batch owns tokens
+    ``[cu_q_lens[s], cu_q_lens[s] + q_lens[s])`` (decode rows are q_len=1
+    chunks, prefill chunks longer runs; the gap up to ``cu_q_lens[s+1]`` is
+    padding and returns zeros). k/v_pool: (n_pages + 1, P, KV, hd) page
+    pools (last page = dump); page_table: (Rn, pps) int32; kv_lens: (Rn,)
+    per-row context length AFTER the chunk, so token ``i`` of row ``s``
+    attends the causal prefix of ``kv_lens[s] - q_lens[s] + i``.
+
+    grid = (rows, pages): the row's next physical page streams through VMEM
+    via the scalar-prefetched block table while the q block (all T tokens)
+    stays VMEM-resident; the online-softmax scratch (m, l, acc over the full
+    token block) is carried across the whole linearized grid, with per-step
+    validity = "token belongs to this row AND key precedes it". Semantics
+    match :func:`repro.kernels.ref.ragged_paged_decode_ref`."""
+    T, H, hd = q.shape
+    _, P, KV, _ = k_pool.shape
+    Rn, pps = page_table.shape
+
+    def ragged_page_map(s, j, cu, ql, kvl, tbl):
+        return (tbl[s, j], 0, 0, 0)
+
+    def ragged_whole_map(s, j, cu, ql, kvl, tbl):
+        return (0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(Rn, pps),
+        in_specs=[
+            pl.BlockSpec((T, H, hd), ragged_whole_map),
+            pl.BlockSpec((1, P, KV, hd), ragged_page_map),
+            pl.BlockSpec((1, P, KV, hd), ragged_page_map),
+        ],
+        out_specs=pl.BlockSpec((T, H, hd), ragged_whole_map),
+        scratch_shapes=[
+            pltpu.VMEM((T, H), jnp.float32),       # running max
+            pltpu.VMEM((T, H), jnp.float32),       # running denominator
+            pltpu.VMEM((T, H, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, P=P, KV=KV),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, H, hd), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(cu_q_lens, jnp.int32), jnp.asarray(q_lens, jnp.int32),
+      jnp.asarray(kv_lens, jnp.int32), jnp.asarray(page_table, jnp.int32),
+      q, k_pool, v_pool)

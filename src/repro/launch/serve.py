@@ -5,6 +5,11 @@ lengths.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --requests 16 --engine both --rate 50 --gen-max 32
 
+The continuous engine defaults to CHUNKED prefill through the unified
+ragged step (two jit compiles total); ``--bucketed`` restores the legacy
+bucketed prefill → insert → decode trio for A/B comparisons, and
+``--chunk-size`` / ``--chunk-rows`` set the per-tick prefill token budget.
+
 ``--paged`` swaps the dense slot cache for the block-table paged KV cache
 (``--page-size`` rows per page, ``--pages`` physical pool pages; 0 sizes the
 pool at dense-equivalent capacity), so cache HBM scales with actual request
@@ -45,14 +50,15 @@ def _csv_ints(text: str):
 
 
 def _log_report(rep) -> None:
+    mode = (f"chunked({rep.chunk_size})" if rep.chunked else "bucketed")
     logger.info(
-        "[%s] %d reqs | compile %.2fs | prefill %.3fs (%.0f tok/s) | "
+        "[%s/%s] %d reqs | compile %.2fs | prefill %.3fs (%.0f tok/s) | "
         "decode %.3fs (%.0f tok/s, occupancy %.2f) | combined %.1f tok/s | "
-        "latency p50 %.3fs p99 %.3fs",
-        rep.engine, rep.n_requests, rep.compile_s, rep.prefill_s,
+        "ttft p50 %.3fs p99 %.3fs | latency p50 %.3fs p99 %.3fs",
+        rep.engine, mode, rep.n_requests, rep.compile_s, rep.prefill_s,
         rep.prefill_tok_s, rep.decode_s, rep.decode_tok_s,
-        rep.mean_occupancy, rep.combined_tok_s, rep.latency_p50_s,
-        rep.latency_p99_s)
+        rep.mean_occupancy, rep.combined_tok_s, rep.ttft_p50_s,
+        rep.ttft_p99_s, rep.latency_p50_s, rep.latency_p99_s)
     if rep.paged:
         logger.info(
         "[%s] paged cache: %d pages x %d rows | page occupancy %.2f | "
@@ -80,6 +86,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--bucketed", action="store_true",
+                    help="legacy bucketed-prefill trio instead of the "
+                         "default chunked unified step")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="prefill chunk width (tokens); 0 = page size if "
+                         "--paged else 16")
+    ap.add_argument("--chunk-rows", type=int, default=1,
+                    help="max prefill chunk rows per mixed tick")
     ap.add_argument("--paged", action="store_true",
                     help="block-table paged KV cache (serve/cache.py)")
     ap.add_argument("--page-size", type=int, default=16,
@@ -130,6 +144,8 @@ def main(argv=None) -> dict:
         max_prefill_batch=args.prefill_batch,
         temperature=args.temperature, top_k=args.top_k,
         eos_id=args.eos_id, seed=args.seed,
+        chunked=not args.bucketed, chunk_size=args.chunk_size,
+        chunk_rows=args.chunk_rows,
         paged=args.paged, page_size=args.page_size, n_pages=args.pages)
 
     engines = (["continuous", "static"] if args.engine == "both"

@@ -16,7 +16,7 @@ assignment carve-out: batches carry precomputed embeddings of width d_model.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -243,8 +243,13 @@ def _ssm_prefill(p, cfg, x, lens=None):
     return out, SSMCache(conv=conv_cache, state=final_state)
 
 
-def ssm_chunked_pad(x, dt, A, Bm, Cm, chunk):
-    """ssd_chunked that right-pads the sequence to a chunk multiple."""
+def ssm_chunked_pad(x, dt, A, Bm, Cm, chunk, init_state=None):
+    """ssd_chunked that right-pads the sequence to a chunk multiple.
+
+    The pad positions carry dt = 0 (decay exp(0·A) = 1, update x·dt = 0), so
+    the returned final state is the state after the last REAL position;
+    ``init_state`` ((B, H, P, N) f32) seeds the recurrence for chunked
+    prefill continuation (None -> zeros)."""
     from .ssm import ssd_chunked
     s = x.shape[1]
     pad = (-s) % chunk
@@ -253,7 +258,7 @@ def ssm_chunked_pad(x, dt, A, Bm, Cm, chunk):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
-    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state=init_state)
     return y[:, :s], state
 
 
@@ -310,6 +315,269 @@ def _layer_decode(lp, cfg, kind, x, cache, pos, page_table=None):
     else:
         y = mlp(lp["mlp"], h2)
     return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked serve forward (unified ragged step — prefill chunks + decode rows)
+# ---------------------------------------------------------------------------
+
+class ChunkCtx(NamedTuple):
+    """Per-row geometry of one ragged chunk batch (see :func:`chunk_step`)."""
+    slots: Array      # (Rn,) int32 target slot per row; n_slots = dump (dropped)
+    sl: Array         # (Rn,) int32 clamped slot index (safe for gathers)
+    fresh: Array      # (Rn,) bool — row starts at absolute position 0
+    pos0: Array       # (Rn,) int32 absolute position of the row's first token
+    positions: Array  # (Rn, C) int32 absolute position per token
+    valid: Array      # (Rn, C) bool — token t real iff t < lens[row]
+    lens: Array       # (Rn,) int32 true token count per row
+
+
+def _attn_chunk(lp: dict, cfg: ModelConfig, kind: str, x: Array, kvc,
+                ctx: ChunkCtx, page_table: Optional[Array]):
+    """Attention over one ragged chunk batch with per-slot cache carry.
+
+    Every row attends its own causal prefix: the chunk's keys plus whatever
+    the slot's cache already holds. Cache writes are drop-scatters keyed by
+    ``ctx.slots`` (the dump row n_slots vanishes), so padding rows and
+    padding tokens never touch live slots; gathers go through the clamped
+    ``ctx.sl`` and are garbage-but-finite for dump rows."""
+    Rn, C, _ = x.shape
+    q, k, v = _qkv(lp, cfg, x)
+    cos, sin = rope_angles(ctx.positions, cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    rows = jnp.arange(Rn)[:, None]
+    if page_table is not None and kind != "local":
+        k_pool, v_pool = kvc
+        P = k_pool.shape[-3]
+        pps = page_table.shape[1]
+        dump = k_pool.shape[0] - 1
+        trow = page_table[ctx.slots]                       # (Rn, pps)
+        logical = jnp.minimum(ctx.positions // P, pps - 1)
+        phys = jnp.where(ctx.valid, trow[rows, logical], dump)
+        off = ctx.positions % P
+        k_pool = k_pool.at[phys, off].set(k.astype(k_pool.dtype))
+        v_pool = v_pool.at[phys, off].set(v.astype(v_pool.dtype))
+        if cfg.use_pallas_decode:
+            from repro.kernels.swa import ragged_paged_decode_pallas
+            cu = C * jnp.arange(Rn + 1, dtype=jnp.int32)
+            out = ragged_paged_decode_pallas(
+                q.reshape(Rn * C, cfg.n_heads, cfg.hd), k_pool, v_pool,
+                trow, cu, ctx.lens, ctx.pos0 + ctx.lens,
+                interpret=cfg.pallas_interpret)
+            out = out.reshape(Rn, C, -1).astype(x.dtype)
+        else:
+            kg = k_pool[trow].reshape(Rn, pps * P, cfg.n_kv, cfg.hd)
+            vg = v_pool[trow].reshape(Rn, pps * P, cfg.n_kv, cfg.hd)
+            mask = (jnp.arange(pps * P)[None, None, :]
+                    <= ctx.positions[:, :, None])
+            out = _sdpa(cfg, q, kg, vg, mask[:, None])
+        return jnp.einsum("bsh,hd->bsd", out, lp["wo"]), (k_pool, v_pool)
+    kc, vc = kvc
+    W = kc.shape[1]
+    if kind == "local":
+        # gather the previous window from the OLD ring (pre-scatter: the
+        # chunk's own keys ride in dense, so nothing here may alias them)
+        qprev = ctx.pos0[:, None] - W + jnp.arange(W)[None, :]   # (Rn, W)
+        kprev = kc[ctx.sl[:, None], qprev % W]
+        vprev = vc[ctx.sl[:, None], qprev % W]
+        keys = jnp.concatenate([kprev.astype(k.dtype), k], axis=1)
+        vals = jnp.concatenate([vprev.astype(v.dtype), v], axis=1)
+        kpos = jnp.concatenate([qprev, ctx.positions], axis=1)   # (Rn, W+C)
+        kval = jnp.concatenate([qprev >= 0, ctx.valid], axis=1)
+        p_ = ctx.positions[:, :, None]
+        mask = (kval[:, None, :] & (kpos[:, None, :] <= p_)
+                & (kpos[:, None, :] > p_ - W))
+        out = _sdpa(cfg, q, keys, vals, mask[:, None])
+        # write back ONLY the last min(W, len) valid tokens: their ring
+        # targets are distinct, and every older ring entry they do not
+        # overwrite still holds the right absolute position
+        keep = ctx.valid & (jnp.arange(C)[None, :] >= ctx.lens[:, None] - W)
+        tgt = jnp.where(keep, ctx.positions % W, W)
+        kc = kc.at[ctx.slots[:, None], tgt].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[ctx.slots[:, None], tgt].set(v.astype(vc.dtype), mode="drop")
+    else:
+        tgt = jnp.where(ctx.valid, jnp.minimum(ctx.positions, W - 1), W)
+        kc = kc.at[ctx.slots[:, None], tgt].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[ctx.slots[:, None], tgt].set(v.astype(vc.dtype), mode="drop")
+        kg = kc[ctx.sl]                                          # (Rn, W, KV, hd)
+        vg = vc[ctx.sl]
+        mask = jnp.arange(W)[None, None, :] <= ctx.positions[:, :, None]
+        out = _sdpa(cfg, q, kg, vg, mask[:, None])
+    return jnp.einsum("bsh,hd->bsd", out, lp["wo"]), (kc, vc)
+
+
+def _ssm_chunk(p, cfg: ModelConfig, x: Array, cache, ctx: ChunkCtx):
+    """ssm_block over one chunk with conv + recurrent state carry.
+
+    The conv history is the previous chunk's trailing ``conv_width - 1``
+    inputs (zeros when fresh — matching the decode conv cache init); padded
+    tokens get dt = 0, so the emitted state is exactly the state after the
+    row's last real token."""
+    from .ssm import SSMCache
+    Rn, C, _ = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    zxbcdt = jnp.einsum("bsd,do->bso", x, p["in_proj"])
+    z, xc, Bc, Cc, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    Kw = cfg.conv_width
+    conv_prev = jnp.where(ctx.fresh[:, None, None], 0,
+                          cache.conv[ctx.sl]).astype(conv_in.dtype)
+    combined = jnp.concatenate([conv_prev, conv_in], axis=1)  # (Rn, Kw-1+C, ·)
+    conv_out = sum(combined[:, i:i + C] * p["conv_w"][i] for i in range(Kw))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"])
+    rows = jnp.arange(Rn)[:, None]
+    # trailing window ending at the row's LAST REAL token (combined index
+    # lens + j is that token's conv input at history offset j - (Kw-1))
+    new_conv = combined[rows, ctx.lens[:, None] + jnp.arange(Kw - 1)[None, :]]
+    xc, Bc, Cc = jnp.split(conv_out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    dt = jnp.where(ctx.valid[..., None], dt, 0.0)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xc.reshape(Rn, C, H, P)
+    init = jnp.where(ctx.fresh[:, None, None, None], 0.0, cache.state[ctx.sl])
+    y, final_state = ssm_chunked_pad(xh.astype(jnp.float32), dt, A,
+                                     Bc.astype(jnp.float32),
+                                     Cc.astype(jnp.float32),
+                                     cfg.ssm_chunk, init_state=init)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Rn, C, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_cache = SSMCache(
+        conv=cache.conv.at[ctx.slots].set(new_conv.astype(cache.conv.dtype),
+                                          mode="drop"),
+        state=cache.state.at[ctx.slots].set(final_state, mode="drop"))
+    return out, new_cache
+
+
+def _rec_chunk(p, cfg: ModelConfig, x: Array, cache, ctx: ChunkCtx):
+    """rglru_block over one chunk with conv + hidden-state carry.
+
+    The associative scan keeps BOTH outputs — the running decay product
+    ``a_cum`` and the zero-init hidden ``h0`` — so the carried state enters
+    as ``h = h0 + a_cum · h_init`` (affine-map composition), exactly the
+    decode recurrence iterated over the chunk."""
+    from .griffin import LRUCache, _rglru_coeffs
+    Rn, C, _ = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"]))
+    u0 = jnp.einsum("bsd,dw->bsw", x, p["w_in_branch"])
+    Kw = cfg.conv_width
+    conv_prev = jnp.where(ctx.fresh[:, None, None], 0,
+                          cache.conv[ctx.sl]).astype(u0.dtype)
+    combined = jnp.concatenate([conv_prev, u0], axis=1)
+    u = sum(combined[:, i:i + C] * p["conv_w"][i] for i in range(Kw))
+    u = u + p["conv_b"]
+    rows = jnp.arange(Rn)[:, None]
+    new_conv = combined[rows, ctx.lens[:, None] + jnp.arange(Kw - 1)[None, :]]
+    a, b = _rglru_coeffs(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_cum, h0 = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_init = jnp.where(ctx.fresh[:, None], 0.0, cache.h[ctx.sl])
+    h = h0 + a_cum * h_init[:, None, :]
+    out = jnp.einsum("bsw,wd->bsd", h.astype(x.dtype) * gate, p["w_out"])
+    h_last = h[jnp.arange(Rn), jnp.maximum(ctx.lens - 1, 0)]
+    new_cache = LRUCache(
+        conv=cache.conv.at[ctx.slots].set(new_conv.astype(cache.conv.dtype),
+                                          mode="drop"),
+        h=cache.h.at[ctx.slots].set(h_last, mode="drop"))
+    return out, new_cache
+
+
+def _layer_chunk(lp, cfg, kind, x, cache, ctx, page_table=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "ssm":
+        out, cache = _ssm_chunk(lp["mix"], cfg, h, cache, ctx)
+        return x + out, cache
+    if kind == "rec":
+        out, cache = _rec_chunk(lp["mix"], cfg, h, cache, ctx)
+        x = x + out
+    else:
+        out, cache = _attn_chunk(lp["mix"], cfg, kind, h, cache, ctx,
+                                 page_table)
+        x = x + out
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if _mlp_kind(cfg, kind) == "moe":
+        y, _ = moe_block(lp["mlp"], cfg, h2)
+    else:
+        y = mlp(lp["mlp"], h2)
+    return x + y, cache
+
+
+def chunk_step(params: Pytree, cfg: ModelConfig, cache: dict, tokens: Array,
+               row_slots: Array, row_lens: Array, row_fresh: Array,
+               page_table: Optional[Array] = None) -> tuple[Array, dict]:
+    """One unified ragged step over a mixed chunk batch (the serve hot path).
+
+    ``tokens`` (Rn, C) int32 packs prefill CHUNKS and decode rows (C-column
+    rows with ``row_lens = 1``) into one call against the slot cache:
+    row r appends its ``row_lens[r]`` real tokens to slot ``row_slots[r]``
+    (``n_slots`` = dump — the row computes garbage and writes nothing),
+    starting at position 0 when ``row_fresh[r]`` else at the slot's current
+    ``cache["pos"]``. All mixers carry per-slot chunk state exactly: KV
+    scatter (dense rows or block-table pages), local ring window carry, SSM
+    conv + recurrent init_state, RG-LRU conv + affine hidden carry. Returns
+    (logits (Rn, 1, V) at each row's LAST real token, updated cache) —
+    callers jit with ``donate_argnums`` on the cache. Requires a causal
+    text-frontend model; padding tokens stay finite but their values are
+    never read back."""
+    assert cfg.causal and cfg.frontend == "none", \
+        "chunked serving requires a causal token-frontend model"
+    dtype = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]                                   # (S,) int32
+    S = pos.shape[0]
+    Rn, C = tokens.shape
+    row_slots = jnp.asarray(row_slots, jnp.int32)
+    row_lens = jnp.asarray(row_lens, jnp.int32)
+    row_fresh = jnp.asarray(row_fresh, bool)
+    sl = jnp.minimum(row_slots, S - 1)
+    pos0 = jnp.where(row_fresh, 0, pos[sl])
+    positions = pos0[:, None] + jnp.arange(C)[None, :]
+    valid = jnp.arange(C)[None, :] < row_lens[:, None]
+    ctx = ChunkCtx(slots=row_slots, sl=sl, fresh=row_fresh, pos0=pos0,
+                   positions=positions, valid=valid, lens=row_lens)
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    prefix, n_full, rem = layer_plan(cfg)
+    new_cache: dict = {"pos": pos.at[row_slots].set(pos0 + row_lens,
+                                                    mode="drop")}
+
+    if prefix:
+        cps = []
+        for lp, kind, cp in zip(params["prefix"], prefix, cache["prefix"]):
+            x, cp = _layer_chunk(lp, cfg, kind, x, cp, ctx, page_table)
+            cps.append(cp)
+        new_cache["prefix"] = cps
+
+    if n_full:
+        def group_body(x, gp_cache):
+            gp, gc = gp_cache
+            cs = []
+            for lp, kind, cp in zip(gp, cfg.pattern, gc):
+                x, cp = _layer_chunk(lp, cfg, kind, x, cp, ctx, page_table)
+                cs.append(cp)
+            return x, tuple(cs)
+        x, gcache = jax.lax.scan(group_body, x,
+                                 (params["groups"], tuple(cache["groups"])))
+        new_cache["groups"] = list(gcache)
+
+    if rem:
+        crs = []
+        for lp, kind, cp in zip(params["rem"], rem, cache["rem"]):
+            x, cp = _layer_chunk(lp, cfg, kind, x, cp, ctx, page_table)
+            crs.append(cp)
+        new_cache["rem"] = crs
+
+    x = x[jnp.arange(Rn), jnp.maximum(row_lens - 1, 0)][:, None]  # (Rn, 1, d)
+    return logits_from_hidden(params, cfg, x), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,19 @@
               streams are identical regardless of slot assignment, batch
               composition or arrival order.
 
+The DEFAULT continuous path is CHUNKED (``ServeConfig(chunked=True)``, no
+explicit buckets): the trio above collapses into ONE jitted unified ragged
+step (``make_unified_step`` → models/lm.py ``chunk_step``). Prompts stream
+in fixed ``chunk_size`` chunks interleaved with decode — every tick runs
+either a mixed ``(n_slots + chunk_rows, chunk_size)`` batch (decode rows at
+columns 0..n_slots-1, row index == slot id; up to ``chunk_rows`` prefill
+chunk rows behind them) or a decode-only ``(n_slots, 1)`` batch. Exactly
+TWO compiles cover every workload (one per batch shape class), a long
+prompt never stalls the decoding streams for a whole prefill call (TTFT),
+and no prompt-length padding is ever computed. Explicit ``buckets``,
+``engine="static"``, a mesh, or a non-token frontend fall back to the
+legacy bucketed trio below.
+
 ``engine="static"`` runs the A/B baseline on the same jitted steps: one
 fixed batch at a time — admission only when the engine is idle, no slot
 retirement until the whole batch finishes — so short requests pay for the
@@ -44,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.steps import (make_decode_slots_step, make_serve_prefill_step,
-                              sample_next)
+                              make_unified_step, sample_next)
 from repro.models.config import ModelConfig
 from repro.serve.cache import (PageAllocator, SlotMap, init_paged_cache,
                                init_slot_cache, insert_prefill,
@@ -62,7 +75,16 @@ _NULL_CTX = contextlib.nullcontext()
 class ServeConfig:
     n_slots: int = 8
     max_len: int = 256              # slot capacity (prompt + generation)
-    buckets: tuple = ()             # () -> powers of two up to max_len
+    buckets: tuple = ()             # () -> chunked serving (DEFAULT); an
+                                    # explicit tuple selects the legacy
+                                    # bucketed-prefill trio
+    chunked: bool = True            # unified ragged step + chunked prefill;
+                                    # auto-disabled by static/mesh/buckets/
+                                    # non-token frontends (legacy trio)
+    chunk_size: int = 0             # prefill chunk width (tokens); 0 ->
+                                    # page_size if paged else 16
+    chunk_rows: int = 1             # max prefill chunk rows per mixed tick
+                                    # (token budget = chunk_rows*chunk_size)
     max_prefill_batch: int = 4      # fixed prefill batch dim (dump-row padded)
     temperature: float = 0.0        # <= 0 -> greedy
     top_k: int = 0                  # 0 -> full vocab
@@ -90,6 +112,10 @@ class ServeReport:
     combined_tok_s: float = 0.0     # gen tokens / (compile+prefill+decode)
     latency_p50_s: float = 0.0      # request completion - arrival
     latency_p99_s: float = 0.0
+    ttft_p50_s: float = 0.0         # first generated token - arrival
+    ttft_p99_s: float = 0.0
+    chunked: bool = False
+    chunk_size: int = 0
     mean_occupancy: float = 0.0     # useful slot-rows per decode step
     paged: bool = False
     page_size: int = 0
@@ -137,8 +163,21 @@ class ServeEngine:
         # static mode prefills the whole batch at once; continuous packs up
         # to max_prefill_batch requests per (bucketed) prefill call
         self._prefill_batch = S if self.static else min(scfg.max_prefill_batch, S)
-        buckets = scfg.buckets or default_buckets(scfg.max_len)
-        self.sched = Scheduler(buckets, self._prefill_batch)
+        # unified chunked path: continuous engine, single host, no explicit
+        # buckets, token frontend — anything else keeps the legacy trio
+        self.chunked = (scfg.chunked and not self.static and mesh is None
+                        and not scfg.buckets and cfg.frontend == "none")
+        if self.chunked:
+            self.chunk_size = scfg.chunk_size or (scfg.page_size if scfg.paged
+                                                  else 16)
+            self.chunk_rows = max(1, min(scfg.chunk_rows, S))
+            self.sched = Scheduler(None, self._prefill_batch)
+        else:
+            self.chunk_size = 0
+            self.chunk_rows = 0
+            self.sched = Scheduler(scfg.buckets or
+                                   default_buckets(scfg.max_len),
+                                   self._prefill_batch)
         self.slots = SlotMap(S)
         self.slot_req: Dict[int, Request] = {}
         self.paged = scfg.paged
@@ -150,58 +189,76 @@ class ServeEngine:
         else:
             self.pager = None
 
-        prefill_step = make_serve_prefill_step(cfg, scfg.max_len)
-        decode_step = make_decode_slots_step(cfg, scfg.temperature,
-                                             scfg.top_k, paged=self.paged)
         t, k = scfg.temperature, scfg.top_k
-
-        def first_token(logits, req_keys):
-            # prefill logits are (B, 1, V): already each request's last real
-            # position; token index 0 keys the request's first sample
-            return sample_next(logits[:, 0], req_keys,
-                               jnp.zeros(req_keys.shape[0], jnp.int32), t, k)
-
-        if mesh is not None:
+        self.prefilling: Dict[int, list] = {}    # slot -> [request, consumed]
+        self._rr = 0                             # chunk-row round-robin cursor
+        if self.chunked:
+            self._unified = jax.jit(
+                make_unified_step(cfg, t, k, paged=self.paged),
+                donate_argnums=(1,))
             if self.paged:
-                # paged pools shard over pages, not slots — wiring the page
-                # axis into cache_sharding is a ROADMAP follow-up
-                raise NotImplementedError("paged cache + mesh serving")
-            from repro.dist.sharding import cache_sharding, param_sharding
-            from repro.launch.specs import serve_cache_specs
-            c_shard = cache_sharding(cfg, mesh,
-                                     serve_cache_specs(cfg, S, scfg.max_len))
-            p_shard = param_sharding(cfg, mesh, params, mode="decode")
-            params = jax.device_put(params, p_shard)
-            self._prefill = jax.jit(prefill_step)
-            self._insert = jax.jit(insert_prefill, donate_argnums=(0,),
-                                   out_shardings=c_shard)
-            # pin the cache output to its input layout: without this XLA
-            # re-replicates the updated KV cache every decoded token
-            self._decode = jax.jit(decode_step, donate_argnums=(1,),
-                                   out_shardings=(None, c_shard))
-            self.cache = jax.device_put(
-                init_slot_cache(cfg, S, scfg.max_len), c_shard)
-        elif self.paged:
-            self._prefill = jax.jit(prefill_step)
-            self._insert = jax.jit(
-                functools.partial(insert_prefill_paged, cfg, scfg.page_size),
-                donate_argnums=(0,))
-            self._decode = jax.jit(decode_step, donate_argnums=(1,))
-            self.cache = init_paged_cache(cfg, S, scfg.max_len,
-                                          scfg.page_size, self.pager.n_pages)
+                self.cache = init_paged_cache(cfg, S, scfg.max_len,
+                                              scfg.page_size,
+                                              self.pager.n_pages)
+            else:
+                self.cache = init_slot_cache(cfg, S, scfg.max_len)
         else:
-            self._prefill = jax.jit(prefill_step)
-            self._insert = jax.jit(insert_prefill, donate_argnums=(0,))
-            self._decode = jax.jit(decode_step, donate_argnums=(1,))
-            self.cache = init_slot_cache(cfg, S, scfg.max_len)
-        self._first = jax.jit(first_token)
+            prefill_step = make_serve_prefill_step(cfg, scfg.max_len)
+            decode_step = make_decode_slots_step(cfg, scfg.temperature,
+                                                 scfg.top_k, paged=self.paged)
+
+            def first_token(logits, req_keys):
+                # prefill logits are (B, 1, V): already each request's last
+                # real position; token index 0 keys the first sample
+                return sample_next(logits[:, 0], req_keys,
+                                   jnp.zeros(req_keys.shape[0], jnp.int32),
+                                   t, k)
+
+            if mesh is not None:
+                if self.paged:
+                    # paged pools shard over pages, not slots — wiring the
+                    # page axis into cache_sharding is a ROADMAP follow-up
+                    raise NotImplementedError("paged cache + mesh serving")
+                from repro.dist.sharding import cache_sharding, param_sharding
+                from repro.launch.specs import serve_cache_specs
+                c_shard = cache_sharding(
+                    cfg, mesh, serve_cache_specs(cfg, S, scfg.max_len))
+                p_shard = param_sharding(cfg, mesh, params, mode="decode")
+                params = jax.device_put(params, p_shard)
+                self._prefill = jax.jit(prefill_step)
+                self._insert = jax.jit(insert_prefill, donate_argnums=(0,),
+                                       out_shardings=c_shard)
+                # pin the cache output to its input layout: without this XLA
+                # re-replicates the updated KV cache every decoded token
+                self._decode = jax.jit(decode_step, donate_argnums=(1,),
+                                       out_shardings=(None, c_shard))
+                self.cache = jax.device_put(
+                    init_slot_cache(cfg, S, scfg.max_len), c_shard)
+            elif self.paged:
+                self._prefill = jax.jit(prefill_step)
+                self._insert = jax.jit(
+                    functools.partial(insert_prefill_paged, cfg,
+                                      scfg.page_size),
+                    donate_argnums=(0,))
+                self._decode = jax.jit(decode_step, donate_argnums=(1,))
+                self.cache = init_paged_cache(cfg, S, scfg.max_len,
+                                              scfg.page_size,
+                                              self.pager.n_pages)
+            else:
+                self._prefill = jax.jit(prefill_step)
+                self._insert = jax.jit(insert_prefill, donate_argnums=(0,))
+                self._decode = jax.jit(decode_step, donate_argnums=(1,))
+                self.cache = init_slot_cache(cfg, S, scfg.max_len)
+            self._first = jax.jit(first_token)
         self.params = params
 
         self._base_key = jax.random.PRNGKey(scfg.seed)
         self.cur_tok = np.zeros((S,), np.int32)
         self.req_keys = np.zeros((S, 2), np.uint32)
         self.gen_idx = np.zeros((S,), np.int32)
-        self.report = ServeReport(engine=engine, paged=self.paged)
+        self.report = ServeReport(engine=engine, paged=self.paged,
+                                  chunked=self.chunked,
+                                  chunk_size=self.chunk_size)
         if self.paged:
             self.report.page_size = scfg.page_size
             self.report.n_pages = self.pager.n_pages
@@ -243,7 +300,8 @@ class ServeEngine:
             raise ValueError(
                 f"request {req.uid}: max_new_tokens must be >= 1, got "
                 f"{req.max_new_tokens}")
-        if req.prompt_len > self.sched.buckets[-1]:
+        if self.sched.buckets is not None and \
+                req.prompt_len > self.sched.buckets[-1]:
             raise ValueError(
                 f"request {req.uid}: prompt length {req.prompt_len} exceeds "
                 f"the largest prefill bucket {self.sched.buckets[-1]}")
@@ -412,28 +470,194 @@ class ServeEngine:
                 self._release(slot)
 
     # ------------------------------------------------------------------
+    # unified chunked path (self.chunked)
+    # ------------------------------------------------------------------
+
+    def _admit_chunked(self) -> None:
+        """FCFS: pop head requests into free slots (paged: only while the
+        head's worst-case page span fits) and start streaming their prompts
+        through the unified step, ``chunk_size`` tokens per tick."""
+        while self.slots.n_free and self.sched.n_waiting:
+            head = self.sched.queue[0]
+            if self.paged and self._pages_for(head) > self.pager.n_free:
+                break                       # strict FCFS: wait for pages
+            r = self.sched.queue.popleft()
+            slot = self.slots.alloc(r.uid)
+            if self.paged:
+                need = self._pages_for(r)
+                self.pager.alloc(slot, need)
+                self._pages_per_req.append(need)
+            self.prefilling[slot] = [r, 0]
+            if self._obs is not None:
+                self._obs.request_begin(r.uid, slot=slot,
+                                        prompt_len=r.prompt_len)
+                self._obs.event("serve.request.admit",
+                                step=self.report.decode_steps, uid=r.uid,
+                                slot=slot, prompt_len=r.prompt_len)
+
+    def _unified_tick(self) -> None:
+        """One unified-step call: every decoding slot advances one token and
+        up to ``chunk_rows`` prefilling slots consume one prompt chunk each.
+        Only two batch shapes ever run — mixed (S + chunk_rows, chunk_size)
+        while any prompt is streaming, decode-only (S, 1) otherwise — so the
+        compile count is per SHAPE CLASS, not per prompt length."""
+        S, C = self.slots.n_slots, self.chunk_size
+        mixed = bool(self.prefilling)
+        Rn, W = (S + self.chunk_rows, C) if mixed else (S, 1)
+        toks = np.zeros((Rn, W), np.int32)
+        row_slots = np.full((Rn,), self.slots.dump_slot, np.int32)
+        row_lens = np.ones((Rn,), np.int32)
+        row_fresh = np.ones((Rn,), bool)
+        keys = np.zeros((Rn, 2), np.uint32)
+        tok_idx = np.zeros((Rn,), np.int32)
+        # decode rows: row index == slot id (the replicated engine's health
+        # indexing relies on this); inactive slots stay dump rows
+        for slot in self.slot_req:
+            toks[slot, 0] = self.cur_tok[slot]
+            row_slots[slot] = slot
+            row_fresh[slot] = False
+            keys[slot] = self.req_keys[slot]
+            tok_idx[slot] = self.gen_idx[slot]
+        # chunk rows: round-robin over the prefilling slots so concurrent
+        # long prompts make even progress (no intra-queue starvation)
+        chunk_meta: List[tuple] = []     # (row, slot, take, finishing)
+        if mixed:
+            order = sorted(self.prefilling)
+            start = self._rr % len(order)
+            picked = [order[(start + i) % len(order)]
+                      for i in range(min(self.chunk_rows, len(order)))]
+            self._rr += len(picked)
+            for j, slot in enumerate(picked):
+                r, consumed = self.prefilling[slot]
+                take = min(C, r.prompt_len - consumed)
+                row = S + j
+                toks[row, :take] = r.tokens[consumed:consumed + take]
+                row_slots[row] = slot
+                row_lens[row] = take
+                row_fresh[row] = consumed == 0
+                finishing = consumed + take >= r.prompt_len
+                if finishing and self.scfg.temperature > 0.0:
+                    keys[row] = self._req_key(r.uid)
+                chunk_meta.append((row, slot, take, finishing))
+
+        useful = len(self.slot_req)
+        chunk_toks = sum(m[2] for m in chunk_meta)
+        t0 = time.perf_counter()
+        args = (self.params, self.cache, jnp.asarray(toks),
+                jnp.asarray(row_slots), jnp.asarray(row_lens),
+                jnp.asarray(row_fresh), jnp.asarray(keys),
+                jnp.asarray(tok_idx))
+        if self.paged:
+            args += (jnp.asarray(self.pager.table),)
+        with self._obs.span("decode", slots=useful,
+                            chunk_rows=len(chunk_meta),
+                            chunk_tokens=chunk_toks) \
+                if self._obs is not None else _NULL_CTX:
+            nxt, self.cache = self._unified(*args)
+            nxt = np.asarray(nxt)                    # host sync
+        dt = time.perf_counter() - t0
+        # split the step's wall time by token share: chunk tokens are
+        # prefill work, decode rows decode work (one token each)
+        frac = chunk_toks / max(1, chunk_toks + useful)
+        self.report.prefill_s += dt * frac
+        self.report.prefill_tokens += chunk_toks
+        if useful:
+            self.report.decode_s += dt * (1.0 - frac)
+            self.report.decode_steps += 1
+            self._occ_sum += useful / S
+            if self.paged:
+                self._page_occ_sum += self.pager.occupancy
+        if self._obs is not None:
+            step_no = self.report.decode_steps
+            self._decode_times.append(dt)
+            occ = useful / S
+            self._obs.metric("serve.decode_s", dt, step=step_no)
+            self._obs.metric("serve.slot_occupancy", occ, step=step_no)
+            self._obs.metric("serve.queue_depth", self.sched.n_waiting,
+                             step=step_no)
+            counters = {"depth": self.sched.n_waiting, "slots": occ}
+            if self.paged:
+                self._obs.metric("serve.page_occupancy",
+                                 self.pager.occupancy, step=step_no)
+                counters["pages"] = self.pager.occupancy
+            self._obs.counter("serve.occupancy", **counters)
+            if chunk_toks:
+                # the chunk rows' share of the tick is prefill work — same
+                # proportional split the report uses
+                self._prefill_times.append(dt * frac)
+                self._obs.metric("serve.prefill_s", dt * frac, step=step_no)
+                self._obs.metric("serve.prefill_tokens",
+                                 self.report.prefill_tokens, step=step_no)
+
+        now = self._now()      # stamp AFTER the device work that produced it
+        for slot in list(self.slot_req):
+            r = self.slot_req[slot]
+            tok = int(nxt[slot])
+            r.out_tokens.append(tok)
+            self.cur_tok[slot] = tok
+            self.gen_idx[slot] += 1
+            self.report.gen_tokens += 1
+            self._maybe_finish(slot, r, tok, now)
+        # chunk rows: advance consumption; a row that just consumed its last
+        # prompt token GRADUATES to decoding with its first sampled token
+        for row, slot, take, finishing in chunk_meta:
+            if not finishing:
+                self.prefilling[slot][1] += take
+                continue
+            r, _ = self.prefilling.pop(slot)
+            tok = int(nxt[row])
+            self.slot_req[slot] = r
+            r.out_tokens.append(tok)
+            r.t_first_token = now
+            self.cur_tok[slot] = tok
+            self.req_keys[slot] = keys[row]
+            self.gen_idx[slot] = 1           # next sampled token's index
+            self.report.gen_tokens += 1
+            self._maybe_finish(slot, r, tok, now)
+
+    def _warmup_chunked(self) -> None:
+        """Compile BOTH unified shape classes on all-dump-row batches —
+        exactly two compiles, whatever the workload's prompt-length mix."""
+        S = self.slots.n_slots
+        for Rn, W in ((S + self.chunk_rows, self.chunk_size), (S, 1)):
+            args = (self.params, self.cache, jnp.zeros((Rn, W), jnp.int32),
+                    jnp.full((Rn,), self.slots.dump_slot, jnp.int32),
+                    jnp.ones((Rn,), jnp.int32), jnp.ones((Rn,), bool),
+                    jnp.zeros((Rn, 2), jnp.uint32),
+                    jnp.zeros((Rn,), jnp.int32))
+            if self.paged:
+                args += (jnp.asarray(self.pager.table),)
+            _, self.cache = self._unified(*args)
+        jax.block_until_ready(self.cache)
+
+    # ------------------------------------------------------------------
     # warmup (compile-time accounting)
     # ------------------------------------------------------------------
 
     def warmup(self, bucket_lens: Sequence[int]) -> float:
-        """Compile the decode step and each (prefill, insert, first-token)
-        bucket shape on dummy data; the elapsed time is reported as
-        ``compile_s`` so serving numbers exclude jit compiles. Dump-row
-        inserts and free-slot decodes leave the (empty) engine state
-        semantically untouched."""
+        """Compile every jitted shape on dummy data; the elapsed time is
+        reported as ``compile_s`` so serving numbers exclude jit compiles.
+        Chunked: both unified shape classes (two compiles, ``bucket_lens``
+        ignored). Legacy: the decode step plus each (prefill, insert,
+        first-token) bucket shape. Dump-row batches leave the (empty) engine
+        state semantically untouched."""
         cfg, B = self.cfg, self._prefill_batch
         t0 = time.perf_counter()
-        ctx = (self._obs.span("warmup", buckets=len(set(bucket_lens)))
+        n_shapes = 2 if self.chunked else len(set(bucket_lens))
+        ctx = (self._obs.span("warmup", buckets=n_shapes)
                if self._obs is not None else _NULL_CTX)
         with ctx:
-            self._warmup_body(bucket_lens)
+            if self.chunked:
+                self._warmup_chunked()
+            else:
+                self._warmup_body(bucket_lens)
         dt = time.perf_counter() - t0
         self.report.compile_s += dt
         return dt
 
     def _warmup_body(self, bucket_lens: Sequence[int]) -> None:
         cfg, B = self.cfg, self._prefill_batch
-        for L in sorted({self.sched.bucket_for(l) for l in bucket_lens}):
+        for L in sorted({self.sched._bucket_for(l) for l in bucket_lens}):
             batch = {"tokens": jnp.zeros((B, L), jnp.int32)}
             lens = np.ones((B,), np.int32)
             if cfg.frontend == "vision":
@@ -491,13 +715,15 @@ class ServeEngine:
                             budget -= need
                         take.append(self.sched.queue.popleft())
                     if take:
-                        bucket = self.sched.bucket_for(
+                        bucket = self.sched._bucket_for(
                             max(r.prompt_len for r in take))
                         self._do_prefill(PrefillPlan(take, bucket))
                     if self.slot_req and \
                             all(r.done for r in self.slot_req.values()):
                         for slot in list(self.slot_req):  # all max_new == 1
                             self._release(slot)
+            elif self.chunked:
+                self._admit_chunked()
             else:
                 while self.slots.n_free and self.sched.n_waiting:
                     if self.paged:
@@ -511,7 +737,10 @@ class ServeEngine:
                         break
                     self._do_prefill(plan)
             if self.slots.n_active:
-                self._decode_tick()
+                if self.chunked:
+                    self._unified_tick()
+                else:
+                    self._decode_tick()
             elif pending:
                 time.sleep(min(1e-3, max(0.0, pending[0].arrival - now)))
         self.report.wall_s = self._now()
@@ -525,6 +754,11 @@ class ServeEngine:
         if lat:
             rep.latency_p50_s = float(np.percentile(lat, 50))
             rep.latency_p99_s = float(np.percentile(lat, 99))
+        ttft = [r.t_first_token - r.arrival for r in reqs
+                if r.t_first_token is not None]
+        if ttft:
+            rep.ttft_p50_s = float(np.percentile(ttft, 50))
+            rep.ttft_p99_s = float(np.percentile(ttft, 99))
         if rep.decode_steps:
             rep.mean_occupancy = self._occ_sum / rep.decode_steps
             if self.paged:

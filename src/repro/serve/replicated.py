@@ -55,7 +55,8 @@ import numpy as np
 from repro.agg.logits import staleness_weights
 from repro.core.attacks import LOGIT_ATTACKS, LogitAttackConfig
 from repro.dist.steps import (make_replicated_decode_step,
-                              make_replicated_prefill_step, sample_next,
+                              make_replicated_prefill_step,
+                              make_replicated_unified_step, sample_next,
                               vote_logits_fn)
 from repro.models.config import ModelConfig
 from repro.serve.cache import insert_prefill, insert_prefill_paged
@@ -236,7 +237,8 @@ class ReplicatedServeEngine(ServeEngine):
         # replicated report + staleness-derived base vote masses
         self.report = ReplicatedServeReport(
             engine=engine, paged=self.paged, n_replicas=R, vote=rcfg.vote,
-            attack=rcfg.attack.name)
+            attack=rcfg.attack.name, chunked=self.chunked,
+            chunk_size=self.chunk_size)
         if self.paged:
             self.report.page_size = scfg.page_size
             self.report.n_pages = self.pager.n_pages
@@ -251,37 +253,51 @@ class ReplicatedServeEngine(ServeEngine):
         self.params = params_stack
         self.cache = _tmap(
             lambda l: jnp.zeros((R,) + l.shape, l.dtype), self.cache)
-        self._prefill = jax.jit(make_replicated_prefill_step(cfg, scfg.max_len))
-        if self.paged:
-            ins = functools.partial(insert_prefill_paged, cfg, scfg.page_size)
-            self._insert = jax.jit(
-                jax.vmap(ins, in_axes=(0, 0, None, None)),
-                donate_argnums=(0,))
+        if self.chunked:
+            self._unified_jit = jax.jit(
+                make_replicated_unified_step(
+                    cfg, R, rcfg.attack, byz=rcfg.byz, vote=rcfg.vote,
+                    lam=rcfg.lam, zeno_rho=rcfg.zeno_rho,
+                    temperature=scfg.temperature, top_k=scfg.top_k,
+                    paged=self.paged, collect_metrics=self._collect),
+                donate_argnums=(1,))
+            self._unified = self._voted_unified
         else:
-            self._insert = jax.jit(jax.vmap(insert_prefill,
-                                            in_axes=(0, 0, None)),
-                                   donate_argnums=(0,))
-        self._decode_jit = jax.jit(
-            make_replicated_decode_step(
-                cfg, R, rcfg.attack, byz=rcfg.byz, vote=rcfg.vote,
-                lam=rcfg.lam, zeno_rho=rcfg.zeno_rho,
-                temperature=scfg.temperature, top_k=scfg.top_k,
-                paged=self.paged, collect_metrics=self._collect),
-            donate_argnums=(1,))
-        self._decode = self._voted_decode
+            self._prefill = jax.jit(
+                make_replicated_prefill_step(cfg, scfg.max_len))
+            if self.paged:
+                ins = functools.partial(insert_prefill_paged, cfg,
+                                        scfg.page_size)
+                self._insert = jax.jit(
+                    jax.vmap(ins, in_axes=(0, 0, None, None)),
+                    donate_argnums=(0,))
+            else:
+                self._insert = jax.jit(jax.vmap(insert_prefill,
+                                                in_axes=(0, 0, None)),
+                                       donate_argnums=(0,))
+            self._decode_jit = jax.jit(
+                make_replicated_decode_step(
+                    cfg, R, rcfg.attack, byz=rcfg.byz, vote=rcfg.vote,
+                    lam=rcfg.lam, zeno_rho=rcfg.zeno_rho,
+                    temperature=scfg.temperature, top_k=scfg.top_k,
+                    paged=self.paged, collect_metrics=self._collect),
+                donate_argnums=(1,))
+            self._decode = self._voted_decode
 
-        vote_first = vote_logits_fn(rcfg.attack, rcfg.byz, R, vote=rcfg.vote,
-                                    lam=rcfg.lam, zeno_rho=rcfg.zeno_rho)
-        t, k = scfg.temperature, scfg.top_k
+            vote_first = vote_logits_fn(rcfg.attack, rcfg.byz, R,
+                                        vote=rcfg.vote, lam=rcfg.lam,
+                                        zeno_rho=rcfg.zeno_rho)
+            t, k = scfg.temperature, scfg.top_k
 
-        def first_voted(logits, req_keys, weights, akey):
-            voted, scores = vote_first(logits[:, :, 0, :], weights, akey)
-            nxt = sample_next(voted, req_keys,
-                              jnp.zeros(req_keys.shape[0], jnp.int32), t, k)
-            return nxt, scores
+            def first_voted(logits, req_keys, weights, akey):
+                voted, scores = vote_first(logits[:, :, 0, :], weights, akey)
+                nxt = sample_next(voted, req_keys,
+                                  jnp.zeros(req_keys.shape[0], jnp.int32),
+                                  t, k)
+                return nxt, scores
 
-        self._first_jit = jax.jit(first_voted)
-        self._first = self._voted_first
+            self._first_jit = jax.jit(first_voted)
+            self._first = self._voted_first
 
         self._attack_key = jax.random.PRNGKey(rcfg.attack_seed)
         self._attack_ctr = 0
@@ -336,6 +352,16 @@ class ReplicatedServeEngine(ServeEngine):
         self._last_scores = scores
         return nxt, cache
 
+    def _voted_unified(self, params, cache, tokens, row_slots, row_lens,
+                       row_fresh, req_keys, tok_idx, *rest):
+        out = self._unified_jit(
+            params, cache, tokens, row_slots, row_lens, row_fresh, req_keys,
+            tok_idx, jnp.asarray(self._w_now), self._next_attack_key(), *rest)
+        nxt, scores, cache = out[:3]
+        self._last_vm = out[3] if self._collect else None
+        self._last_scores = scores
+        return nxt, cache
+
     # ------------------------------------------------------------------
     # decode tick + quarantine policy
     # ------------------------------------------------------------------
@@ -344,6 +370,18 @@ class ReplicatedServeEngine(ServeEngine):
         self._w_now = self._vote_weights()
         active = [s for s, r in self.slot_req.items() if not r.done]
         super()._decode_tick()
+        self._after_vote(active)
+
+    def _unified_tick(self) -> None:
+        # decode rows sit at columns 0..S-1 of the unified batch (row index
+        # == slot id), so the legacy health indexing scores[:, active] is
+        # valid verbatim on mixed chunk batches too
+        self._w_now = self._vote_weights()
+        active = [s for s, r in self.slot_req.items() if not r.done]
+        super()._unified_tick()
+        self._after_vote(active)
+
+    def _after_vote(self, active: List[int]) -> None:
         if self._obs is not None:
             step = self.report.decode_steps
             self._obs.metric("serve.replica.vote_mass", self._w_now,

@@ -5,10 +5,17 @@ Policy (see serve/README.md for the full table):
 - FCFS admission — requests are prefilled strictly in queue order (no
   reordering, so no starvation); a shorter request behind a long one can
   only ride along in the SAME prefill batch, padded up to its bucket.
-- Bucketed prefill — prompts are padded to a small fixed set of lengths
-  (powers of two by default) and the prefill batch dim is padded to a fixed
-  size with dump rows, so the number of jit recompiles is bounded by
-  ``len(buckets)`` regardless of the workload's length distribution.
+- Chunked prefill (DEFAULT — ``buckets=None``) — the engine streams each
+  admitted prompt in fixed-size chunks through the unified ragged step
+  between decode iterations, under a per-tick token budget of
+  ``chunk_rows × chunk_size``; no prompt-length padding, no per-bucket
+  recompiles (one compile per batch SHAPE CLASS), and a long prompt never
+  stalls the decoding streams for a whole prefill call.
+- Bucketed prefill (legacy — explicit ``buckets``) — prompts are padded to
+  a small fixed set of lengths (powers of two by default) and the prefill
+  batch dim is padded to a fixed size with dump rows, so the number of jit
+  recompiles is bounded by ``len(buckets)`` regardless of the workload's
+  length distribution.
 - Slot admission — a prefill is planned only for as many requests as there
   are free slots; decode proceeds every engine tick for whatever slots are
   active, and slots retire independently on EOS / max_new_tokens.
@@ -20,6 +27,7 @@ Policy (see serve/README.md for the full table):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from typing import Deque, List, NamedTuple, Optional, Sequence
 
@@ -66,14 +74,21 @@ class PrefillPlan(NamedTuple):
 
 
 class Scheduler:
-    """FCFS admission queue producing bucketed prefill plans."""
+    """FCFS admission queue. With ``buckets`` it produces padded bucketed
+    prefill plans (legacy path); with ``buckets=None`` (chunked serving) it is
+    a plain FCFS queue — the engine pulls head requests one at a time and
+    streams them in chunks itself."""
 
-    def __init__(self, buckets: Sequence[int], max_prefill_batch: int = 4):
-        self.buckets = tuple(sorted(buckets))
+    def __init__(self, buckets: Optional[Sequence[int]] = None,
+                 max_prefill_batch: int = 4):
+        self.buckets = tuple(sorted(buckets)) if buckets is not None else None
         self.max_prefill_batch = int(max_prefill_batch)
         self.queue: Deque[Request] = deque()
 
-    def bucket_for(self, prompt_len: int) -> int:
+    def _bucket_for(self, prompt_len: int) -> int:
+        if self.buckets is None:
+            raise RuntimeError("scheduler has no prefill buckets (chunked "
+                               "serving) — bucket_for is legacy-path only")
         for b in self.buckets:
             if prompt_len <= b:
                 return b
@@ -81,8 +96,17 @@ class Scheduler:
             f"prompt length {prompt_len} exceeds the largest bucket "
             f"{self.buckets[-1]}")
 
+    def bucket_for(self, prompt_len: int) -> int:
+        """Deprecated public alias — chunked serving has no buckets; legacy
+        callers keep the exact padding + exceeded-bucket error semantics."""
+        warnings.warn("Scheduler.bucket_for is deprecated; chunked serving "
+                      "does not pad prompts to buckets", DeprecationWarning,
+                      stacklevel=2)
+        return self._bucket_for(prompt_len)
+
     def submit(self, req: Request) -> None:
-        self.bucket_for(req.prompt_len)  # validate up front
+        if self.buckets is not None:
+            self._bucket_for(req.prompt_len)  # validate up front
         self.queue.append(req)
 
     @property
@@ -105,7 +129,7 @@ class Scheduler:
         head = self.queue[0]
         if page_budget is not None and pages_for(head) > page_budget:
             return None
-        bucket = self.bucket_for(head.prompt_len)
+        bucket = self._bucket_for(head.prompt_len)
         if page_budget is not None:
             page_budget -= pages_for(head)
         taken: List[Request] = [self.queue.popleft()]

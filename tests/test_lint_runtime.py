@@ -7,10 +7,14 @@ promised but never enforced:
   (fleet/scenario.py grouping feeding ``jit(vmap(step))``), and ZERO new
   compiles when the same group re-runs same-signature scenarios (different
   seeds / Byzantine masses / the weighted flag are traced data).
-- **scheduler**: a fresh ServeEngine warmup costs exactly one prefill
-  compile per prompt bucket plus the decode step and first-token sampler
-  (n_buckets + 2), and a full synthetic workload after warmup recompiles
-  NOTHING.
+- **scheduler**: a fresh chunked ServeEngine warmup costs exactly ONE
+  compile per token-budget SHAPE CLASS — the mixed (S + chunk_rows, C)
+  batch and the decode-only (S, 1) batch, i.e. 2 total, whatever the
+  workload's prompt-length mix — and any synthetic workload after warmup
+  (including one with an entirely different length mix) recompiles
+  NOTHING. The legacy bucketed trio keeps its old pin: one prefill compile
+  per prompt bucket plus the decode step and first-token sampler
+  (n_buckets + 2).
 - **bisection**: breakdown-matrix probes over Byzantine mass reuse the
   already-compiled fleet step (fleet/matrix.py ``run_cached``) — a second
   matrix pass with a shared group cache is compile-free.
@@ -102,7 +106,7 @@ def test_fleet_group_rerun_is_compile_free():
 
 
 # ---------------------------------------------------------------------------
-# scheduler: one prefill compile per prompt bucket
+# scheduler: one compile per token-budget shape class (chunked default)
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
@@ -110,15 +114,43 @@ def dense_params():
     return init_lm(jax.random.PRNGKey(0), DENSE)
 
 
-def test_scheduler_one_compile_per_bucket(dense_params):
+def test_scheduler_one_compile_per_shape_class(dense_params):
     reqs = synth_workload(8, V, seed=0, prompt_lens=(4, 24), gen_lens=(2, 8))
     # throwaway engine warms every eager-op shape this workload touches
     ServeEngine(DENSE, dense_params, SCFG).run(
         [copy.deepcopy(r) for r in reqs])
 
     eng = ServeEngine(DENSE, dense_params, SCFG)
+    assert eng.chunked            # no explicit buckets -> unified step
+    with compile_count() as cw:
+        eng.warmup([r.prompt_len for r in reqs])
+    # ONE compile per batch shape class: mixed (S + chunk_rows, chunk_size)
+    # + decode-only (S, 1) — independent of the prompt-length mix
+    assert cw.count == 2, cw.events
+
+    with compile_count() as cr:
+        eng.run([copy.deepcopy(r) for r in reqs], warmup=False)
+    assert cr.count == 0, cr.events
+
+    # an entirely different prompt-length mix rides the same two compiles
+    other = synth_workload(6, V, seed=5, prompt_lens=(2, 40),
+                           gen_lens=(2, 6))
+    with compile_count() as c2:
+        eng.run([copy.deepcopy(r) for r in other], warmup=False)
+    assert c2.count == 0, c2.events
+
+
+def test_scheduler_legacy_bucketed_keeps_per_bucket_pin(dense_params):
+    scfg = ServeConfig(n_slots=3, max_len=64, max_prefill_batch=2,
+                       chunked=False)
+    reqs = synth_workload(8, V, seed=0, prompt_lens=(4, 24), gen_lens=(2, 8))
+    ServeEngine(DENSE, dense_params, scfg).run(
+        [copy.deepcopy(r) for r in reqs])                # warm eager shapes
+
+    eng = ServeEngine(DENSE, dense_params, scfg)
+    assert not eng.chunked
     lens = [r.prompt_len for r in reqs]
-    n_buckets = len({eng.sched.bucket_for(l) for l in lens})
+    n_buckets = len({eng.sched._bucket_for(l) for l in lens})
     assert n_buckets >= 2         # the workload must actually span buckets
 
     with compile_count() as cw:
@@ -155,9 +187,9 @@ def test_fleet_obs_group_is_one_compile_and_rerun_free(tmp_path):
 
 
 def test_scheduler_obs_keeps_compile_pins(dense_params, tmp_path):
-    """Host-side obs (spans + rows) on a ServeEngine keeps the exact warmup
-    compile count (n_buckets + 2) and a compile-free run — the single-engine
-    jitted steps are untouched by instrumentation."""
+    """Host-side obs (spans + rows) on a chunked ServeEngine keeps the exact
+    warmup compile count (2: one per unified shape class) and a compile-free
+    run — the single-engine jitted steps are untouched by instrumentation."""
     from repro.obs import RunObs
     reqs = synth_workload(8, V, seed=0, prompt_lens=(4, 24), gen_lens=(2, 8))
     ServeEngine(DENSE, dense_params, SCFG).run(
@@ -165,11 +197,10 @@ def test_scheduler_obs_keeps_compile_pins(dense_params, tmp_path):
 
     obs = RunObs.open(tmp_path, "serve", compile_events=False)
     eng = ServeEngine(DENSE, dense_params, SCFG, obs=obs)
-    lens = [r.prompt_len for r in reqs]
-    n_buckets = len({eng.sched.bucket_for(l) for l in lens})
+    assert eng.chunked
     with compile_count() as cw:
-        eng.warmup(lens)
-    assert cw.count == n_buckets + 2, cw.events
+        eng.warmup([r.prompt_len for r in reqs])
+    assert cw.count == 2, cw.events
     with compile_count() as cr:
         eng.run([copy.deepcopy(r) for r in reqs], warmup=False)
     assert cr.count == 0, cr.events

@@ -322,7 +322,10 @@ def test_replicated_obs_token_parity_and_artifacts(tmp_path, dense_params):
     masses = [r["value"] for r in rows
               if r.get("metric") == "serve.replica.vote_mass"]
     assert all(len(v) == RCFG.n_replicas for v in masses)
-    assert masses[-1][2] == 0.0
+    # the byz replica's eviction zeroes its vote mass in telemetry (the
+    # evict/readmit cycle phase at the final tick depends on tick count,
+    # so pin the zero anywhere in the stream, not at the end)
+    assert any(v[2] == 0.0 for v in masses)
 
     # the trace is Perfetto-loadable: named tracks + spans + request pairs
     import json
@@ -331,7 +334,11 @@ def test_replicated_obs_token_parity_and_artifacts(tmp_path, dense_params):
                 if e["ph"] == "M"}
     assert {"engine", "requests"} <= names_md
     spans = {e["name"] for e in doc["traceEvents"] if e["ph"] == "X"}
-    assert {"prefill", "decode", "warmup"} <= spans
+    assert {"decode", "warmup"} <= spans
+    # chunked default: there is no separate prefill phase — prefill chunks
+    # ride the unified decode span, marked by the chunk_tokens attr
+    assert any(e["name"] == "decode" and e["args"].get("chunk_tokens")
+               for e in doc["traceEvents"] if e["ph"] == "X")
 
 
 def test_quarantine_events_carry_step_score_and_requests(tmp_path,

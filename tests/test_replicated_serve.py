@@ -179,6 +179,25 @@ def test_stale_params_stack_shelf():
                for s in lv)
 
 
+def test_chunked_replicated_matches_legacy_under_attack():
+    """The replicated engine's default path is the unified chunked step (the
+    tests above all run on it); this pins the explicit A/B: chunked and
+    legacy-bucketed replicated serving produce identical voted streams, with
+    and without f < R/2 Byzantine mass, including mid-decode chunk ticks
+    (chunk_size=4 forces several mixed batches per prompt)."""
+    cfg, params = _params("dense")
+    for rcfg in (ReplicatedConfig(n_replicas=3),
+                 ReplicatedConfig(n_replicas=3, byz=(1,),
+                                  attack=LogitAttackConfig(name="sign_flip"))):
+        legacy = _run(ReplicatedServeEngine, cfg, params,
+                      _scfg(chunked=False), rcfg)
+        chunked = _run(ReplicatedServeEngine, cfg, params,
+                       _scfg(chunk_size=4), rcfg)
+        assert not legacy.chunked and chunked.chunked
+        assert chunked.outputs == legacy.outputs == _honest("dense")
+        assert chunked.ttft_p50_s > 0
+
+
 # ---------------------------------------------------------------------------
 # graceful degradation: quarantine, backoff, re-admission
 # ---------------------------------------------------------------------------

@@ -10,7 +10,10 @@ properties:
   outputs regardless of arrival order / slot count / slot assignment;
 - slot reuse: a freed slot's stale KV never leaks into the next request;
 - sampling: temperature=0 is deterministic argmax; temperature>0 is
-  deterministic given a seed and identical across engines / slot layouts.
+  deterministic given a seed and identical across engines / slot layouts;
+- chunked prefill: the unified ragged step streaming prompts in chunks
+  (any chunk size, any chunk_rows, either cache layout, Pallas or oracle)
+  is token-identical to the legacy whole-prompt bucketed trio.
 """
 import copy
 import functools
@@ -209,6 +212,65 @@ def test_paged_pallas_decode_parity():
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (unified ragged step) vs whole-prompt legacy trio
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True],
+                         ids=["dense_cache", "paged_cache"])
+@pytest.mark.parametrize("cfg", CFGS, ids=lambda c: c.name)
+def test_chunked_prefill_token_parity(cfg, paged):
+    """Chunked prefill through the unified step must stream token-identical
+    to the legacy whole-prompt trio, for every decode-capable mixer (global
+    KV scatter, local ring carry, SSM conv+state carry, RG-LRU affine carry,
+    MoE) on both cache layouts, across chunk sizes including ONE PAGE (8)
+    and a whole-prompt-sized chunk (16 >= every prompt here)."""
+    cfg, params = _params(cfg.name)
+    reqs = _workload(n=5, gen=(2, 5))
+    kw = dict(n_slots=3, max_len=MAXLEN, max_prefill_batch=2, paged=paged,
+              page_size=8)
+    ref = ServeEngine(cfg, params,
+                      ServeConfig(chunked=False, **kw)).run(_fresh(reqs))
+    assert not ref.chunked
+    for C in (4, 8, 16):
+        out = ServeEngine(cfg, params,
+                          ServeConfig(chunk_size=C, **kw)).run(_fresh(reqs))
+        assert out.chunked and out.chunk_size == C
+        assert out.outputs == ref.outputs, (cfg.name, paged, C)
+        assert out.ttft_p50_s > 0 and out.ttft_p99_s >= out.ttft_p50_s
+
+
+def test_chunked_multi_chunk_rows_parity():
+    """chunk_rows > 1 (several prompts streaming per tick, round-robin) and
+    chunk_size=1 (one token per tick — the degenerate chunk) both keep exact
+    token parity."""
+    cfg, params = _params("dense")
+    reqs = _workload(n=8, gen=(2, 5))
+    kw = dict(n_slots=4, max_len=MAXLEN, max_prefill_batch=2)
+    ref = ServeEngine(cfg, params,
+                      ServeConfig(chunked=False, **kw)).run(_fresh(reqs))
+    for C, rows in ((4, 3), (1, 2)):
+        out = ServeEngine(cfg, params,
+                          ServeConfig(chunk_size=C, chunk_rows=rows, **kw)
+                          ).run(_fresh(reqs))
+        assert out.outputs == ref.outputs, (C, rows)
+
+
+def test_chunked_pallas_ragged_decode_parity():
+    """use_pallas_decode + paged on the chunked path routes global attention
+    through the ragged paged Pallas kernel — streams must match the oracle
+    engine exactly."""
+    cfg, params = _params("dense")
+    reqs = _workload(n=4, gen=(2, 5))
+    ref = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN)).run(_fresh(reqs))
+    pal = cfg.with_(use_pallas_decode=True)
+    out = ServeEngine(pal, params,
+                      ServeConfig(n_slots=2, max_len=MAXLEN, paged=True,
+                                  page_size=8, chunk_size=8)).run(_fresh(reqs))
+    assert out.chunked and ref.outputs == out.outputs
+
+
+# ---------------------------------------------------------------------------
 # slot reuse
 # ---------------------------------------------------------------------------
 
@@ -352,6 +414,36 @@ def test_submit_rejects_degenerate_requests():
     with pytest.raises(ValueError, match="request 11"):
         eng.run([Request(uid=11, tokens=np.zeros(4, np.int32),
                          max_new_tokens=-3)], warmup=False)
+
+
+def test_chunked_submit_rejects_overflow_and_keeps_bucket_shim():
+    """The chunked engine has no buckets, so the max_len bound is the
+    admission ceiling — prompt + max_new > max_len must fail AT SUBMIT with
+    the uid in the message. ``Scheduler.bucket_for`` survives as a
+    deprecation shim with its exceeded-bucket error path intact."""
+    cfg, params = _params("dense")
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=2, max_len=MAXLEN))
+    assert eng.chunked
+    eng.submit(Request(uid=1, tokens=np.zeros(20, np.int32),
+                       max_new_tokens=12))             # 32 == max_len: fits
+    with pytest.raises(ValueError, match="request 3.*exceeds max_len"):
+        eng.submit(Request(uid=3, tokens=np.zeros(20, np.int32),
+                           max_new_tokens=13))
+    assert eng.sched.n_waiting == 1
+    # run()'s fail-fast pre-check shares the same validation
+    with pytest.raises(ValueError, match="request 4.*exceeds max_len"):
+        eng.run([Request(uid=4, tokens=np.zeros(30, np.int32),
+                         max_new_tokens=30)], warmup=False)
+    # the deprecated shim still pads and still raises past the top bucket
+    sched = Scheduler(buckets=(8, 16), max_prefill_batch=2)
+    with pytest.warns(DeprecationWarning):
+        assert sched.bucket_for(5) == 8
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(ValueError, match="largest bucket"):
+        sched.bucket_for(17)
+    # a bucket-less (chunked) scheduler refuses bucket queries outright
+    with pytest.warns(DeprecationWarning), pytest.raises(RuntimeError):
+        Scheduler(None).bucket_for(5)
 
 
 def test_synth_workload_fully_seed_deterministic():
